@@ -1,0 +1,43 @@
+"""§Roofline: tabulate the dry-run artifacts (experiments/dryrun/*.json).
+
+This benchmark does not lower anything itself — it renders the roofline
+table (three terms, dominant bottleneck, MODEL_FLOPS ratio) from the
+recorded dry-run sweep, so ``python -m benchmarks.run`` stays fast.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def main(full: bool = False) -> None:
+    if not DRYRUN_DIR.exists():
+        emit("roofline/none", 0.0, "no dry-run artifacts; run repro.launch.dryrun --all")
+        return
+    for path in sorted(DRYRUN_DIR.glob("*__single.json")):
+        rec = json.loads(path.read_text())
+        cell = f"{rec['arch']}×{rec['shape']}"
+        if rec.get("status") == "skipped":
+            emit(f"roofline/{cell}", 0.0, "skipped: " + rec["reason"][:80])
+            continue
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            emit(f"roofline/{cell}", 0.0, f"status={rec.get('status')}")
+            continue
+        r = rec["roofline"]
+        t_bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(
+            f"roofline/{cell}",
+            t_bound,
+            f"compute={r['t_compute_s']:.3f}s memory={r['t_memory_s']:.3f}s "
+            f"collective={r['t_collective_s']:.3f}s bottleneck={r['bottleneck']} "
+            f"useful_flops_ratio={rec.get('model_flops_ratio', 0) or 0:.2f} "
+            f"fits={rec.get('fits_hbm')}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: timing, the scaled Table-I suite, CSV."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable
+
+import numpy as np
+
+from repro.core.formats import CSRMatrix
+from repro.core.matrices import SUITE_SPECS
+
+# benchmark subset: one matrix per structural family keeps the default run
+# fast; --full sweeps the whole scaled Table-I analogue suite.
+DEFAULT_SUITE = ["m1_asic320k", "m4_kron16", "m8_mip1", "m10_ohne2", "m14_rajat30"]
+
+
+def load_suite(full: bool = False, seed: int = 0) -> Dict[str, CSRMatrix]:
+    names = list(SUITE_SPECS) if full else DEFAULT_SUITE
+    return {n: SUITE_SPECS[n](seed) for n in names}
+
+
+def timeit(fn: Callable, *, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time in seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` sweeps the whole
+scaled Table-I suite (slower); the default subset covers every structural
+family.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,traffic,schedule,roofline")
+    args = ap.parse_args()
+
+    from . import (
+        bench_combine,
+        bench_preprocess,
+        bench_roofline,
+        bench_schedule,
+        bench_spmv,
+        bench_stddev,
+        bench_traffic,
+    )
+
+    benches = {
+        "stddev": bench_stddev.main,        # Fig. 6
+        "preprocess": bench_preprocess.main,  # Fig. 7
+        "spmv": bench_spmv.main,            # Figs. 8/10
+        "combine": bench_combine.main,      # Fig. 9
+        "traffic": bench_traffic.main,      # Table II
+        "schedule": bench_schedule.main,    # §III-C
+        "roofline": bench_roofline.main,    # EXPERIMENTS §Roofline
+    }
+    selected = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    ok = True
+    for name in selected:
+        try:
+            benches[name](full=args.full)
+        except Exception:
+            ok = False
+            print(f"{name},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps on the synthetic pipeline, with checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Deliverable (b): the loss must visibly decrease; a second invocation
+resumes from the latest checkpoint.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: olmo-1b family scaled to 8 layers x 768
+    cfg = dataclasses.replace(
+        get_config("olmo-1b"),
+        name="olmo-100m",
+        n_layers=8,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        head_dim=64,
+        d_ff=3072,
+        vocab=32768,
+        dtype="float32",
+    )
+    model = build_model(cfg)
+    n = sum(int(v.size) for v in jax.tree.leaves(model.abstract()))
+    print(f"model: {cfg.name} ({n/1e6:.1f}M params)")
+
+    trainer = Trainer(
+        model,
+        AdamWConfig(lr_peak=3e-4, warmup_steps=50, decay_steps=args.steps),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch),
+        TrainerConfig(
+            steps=args.steps,
+            log_every=20,
+            checkpoint_every=100,
+            checkpoint_dir=args.ckpt,
+        ),
+    )
+    trainer.run()
+    first, last = trainer.history[0]["loss"], trainer.history[-1]["loss"]
+    print(f"loss: {first:.3f} -> {last:.3f}")
+    assert last < first, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .roofline import V5E, RooflineTerms, parse_collective_bytes, roofline_from_costs

@@ -1,0 +1,250 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e target).
+
+Terms (per device, per step, seconds):
+
+* compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16)
+* memory     = HLO_bytes / HBM_bw                (819 GB/s)
+* collective = wire_bytes / link_bw              (50 GB/s/link ICI)
+
+``cost_analysis`` on this JAX build is per-device and counts every
+``while`` (scan) body ONCE.  Two corrections are used and cross-checked:
+
+1. **Unrolled extrapolation** (primary): lower the same step with 1 and 2
+   unrolled layer groups; ``per_group = c(2) - c(1)``,
+   ``base = c(1) - per_group``, ``total = base + n_groups·per_group``.
+2. **Trip-count attribution** (cross-check + collectives): parse the
+   optimized HLO text, attribute each collective to its computation, and
+   weight computations by the product of enclosing whiles'
+   ``known_trip_count``s.
+
+Collective wire bytes use ring-algorithm factors on the participating
+group size g: all-reduce 2·(g−1)/g·result, all-gather (g−1)/g·result,
+reduce-scatter (g−1)·result (result is the scattered shard),
+all-to-all (g−1)/g·result, collective-permute 1·result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "V5E",
+    "HardwareSpec",
+    "parse_collective_bytes",
+    "RooflineTerms",
+    "roofline_from_costs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float  # FLOP/s (bf16)
+    hbm_bw: float  # B/s
+    link_bw: float  # B/s per ICI link
+    hbm_bytes: float
+
+
+V5E = HardwareSpec("tpu_v5e", 197e12, 819e9, 50e9, 16e9)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    size = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return float(size * n)
+
+
+def _group_size(line: str, world: int) -> int:
+    # explicit groups: replica_groups={{0,1,2},{...}}
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    # iota format: replica_groups=[32,16]<=[512] -> group size = dims[-1]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return world
+
+
+def _wire_bytes(kind: str, result_bytes: float, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if kind == "collective-permute":
+        return result_bytes
+    return 0.0
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text, from optimized HLO."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _while_edges(hlo: str) -> List[Tuple[str, Optional[int]]]:
+    """(body computation name, known trip count or None) per while op."""
+    out = []
+    for line in hlo.splitlines():
+        if " while(" not in line:
+            continue
+        mb = re.search(r"body=%?([\w\.\-]+)", line)
+        if not mb:
+            continue
+        mt = re.search(r'known_trip_count[\'"]?\s*:\s*\{\s*[\'"]n[\'"]\s*:\s*[\'"](\d+)[\'"]', line)
+        out.append((mb.group(1), int(mt.group(1)) if mt else None))
+    return out
+
+
+def parse_collective_bytes(
+    hlo: str, *, world: int, default_trip: int = 1
+) -> Tuple[float, Dict[str, float]]:
+    """Total per-device collective wire bytes (+ per-kind breakdown).
+
+    Collectives inside scan bodies are weighted by the enclosing whiles'
+    ``known_trip_count`` (falling back to ``default_trip``); nesting
+    composes multiplicatively.
+    """
+    comps = _split_computations(hlo)
+    # weight per computation: entry-reachable while bodies get trip factors
+    weights: Dict[str, float] = {name: 1.0 for name in comps}
+    # build parent -> (body, trips) and propagate breadth-first
+    edges: Dict[str, List[Tuple[str, int]]] = {name: [] for name in comps}
+    for name, body in comps.items():
+        for line in body.splitlines():
+            if " while(" in line:
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                mt = re.search(
+                    r'known_trip_count[\'"]?\s*:\s*\{\s*[\'"]n[\'"]\s*:\s*[\'"](\d+)[\'"]', line
+                )
+                trips = int(mt.group(1)) if mt else default_trip
+                if mb:
+                    edges[name].append((mb.group(1), trips))
+                if mc:
+                    edges[name].append((mc.group(1), 1))
+    # propagate weights topologically (HLO call graph is acyclic)
+    changed = True
+    it = 0
+    while changed and it < 64:
+        changed = False
+        it += 1
+        for parent, childs in edges.items():
+            for child, trips in childs:
+                w = weights.get(parent, 1.0) * trips
+                if child in weights and abs(weights[child] - w) > 1e-9 and w > weights[child]:
+                    weights[child] = w
+                    changed = True
+
+    total = 0.0
+    by_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for name, body in comps.items():
+        w = weights.get(name, 1.0)
+        for line in body.splitlines():
+            for kind in _COLLECTIVES:
+                # result-typed op: "%x = TYPE[shape] kind(" or fused start
+                m = re.search(r"=\s*(?:\()?(\w+\[[\d,]*\])[^=]*\s" + kind + r"(?:-start|-done)?\(", line)
+                if m and f" {kind}" in line:
+                    rb = _shape_bytes(m.group(1))
+                    # tuple results: sum every typed buffer in the tuple
+                    tup = re.search(r"=\s*\(([^)]*)\)\s*" + kind, line)
+                    if tup:
+                        rb = sum(_shape_bytes(s) for s in re.findall(r"\w+\[[\d,]*\]", tup.group(1)))
+                    g = _group_size(line, world)
+                    wb = _wire_bytes(kind, rb, g) * w
+                    total += wb
+                    by_kind[kind] += wb
+                    break
+    return total, by_kind
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float  # per device
+    bytes: float  # per device HBM traffic
+    coll_bytes: float  # per device wire bytes
+    hw: HardwareSpec = V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.hw.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def roofline_from_costs(
+    c1: Dict[str, float],
+    c2: Dict[str, float],
+    n_groups: int,
+    coll_bytes: float,
+    hw: HardwareSpec = V5E,
+) -> RooflineTerms:
+    """Linear extrapolation from 1-group and 2-group unrolled lowerings."""
+
+    def extrap(key: str) -> float:
+        per = c2.get(key, 0.0) - c1.get(key, 0.0)
+        base = c1.get(key, 0.0) - per
+        return max(base + n_groups * per, 0.0)
+
+    return RooflineTerms(extrap("flops"), extrap("bytes accessed"), coll_bytes, hw)

@@ -1,0 +1,141 @@
+"""Sharded checkpointing with async write, restart and elastic re-mesh.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json            tree structure, shapes, dtypes, step
+        <leaf-key>.npy           one file per pytree leaf (host values)
+
+Design points for large-scale runs:
+
+* **process-local shards** — on a real multi-host cluster every process
+  writes only its addressable shards (here: the single host writes all);
+  the manifest keys are tree paths, not device ids, so restore is
+  topology-independent;
+* **async save** — the host copy is snapshotted synchronously (cheap), the
+  file writes happen on a background thread so the train loop is not
+  blocked (fault-tolerance without step-time cost);
+* **elastic re-mesh** — ``restore`` takes the *target* sharding tree and
+  uses ``jax.device_put`` per leaf, so a checkpoint taken on one mesh
+  restores onto any other mesh shape (scale up/down after failures);
+* **integrity** — writes go to ``step_xxx.tmp`` and are atomically renamed;
+  a crash mid-save never corrupts the latest complete checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import ml_dtypes
+
+# numpy cannot natively serialise bfloat16 — store a uint16 view + the
+# logical dtype in the manifest and view it back on restore.
+_VIEW_DTYPES = {"bfloat16": np.uint16}
+
+__all__ = ["Checkpointer"]
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+        """Snapshot ``tree`` at ``step``; file IO runs on a worker thread."""
+        self.wait()  # one in-flight save at a time
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        treedef = jax.tree.structure(tree)
+
+        def write():
+            tmp = self.dir / f"step_{step:08d}.tmp"
+            final = self.dir / f"step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {"step": step, "leaves": {}}
+            for i, (key, arr) in enumerate(host.items()):
+                fname = f"leaf_{i:05d}.npy"
+                logical = str(arr.dtype)
+                if logical in _VIEW_DTYPES:
+                    np.save(tmp / fname, arr.view(_VIEW_DTYPES[logical]))
+                else:
+                    np.save(tmp / fname, arr)
+                manifest["leaves"][key] = {
+                    "file": fname,
+                    "shape": list(arr.shape),
+                    "dtype": logical,
+                }
+            manifest["treedef"] = str(treedef)
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.dir.glob("step_*"))
+        for old in steps[: -self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(self.dir.glob("step_*"))
+        steps = [s for s in steps if not s.name.endswith(".tmp")]
+        if not steps:
+            return None
+        return int(steps[-1].name.split("_")[1])
+
+    def restore(self, template, *, step: Optional[int] = None, shardings=None):
+        """Restore into the structure of ``template``.
+
+        ``shardings`` (same tree structure, NamedSharding leaves) re-shards
+        onto the current mesh — elastic restore across topology changes.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        src = self.dir / f"step_{step:08d}"
+        manifest = json.loads((src / "manifest.json").read_text())
+        flat_template, treedef = jax.tree_util.tree_flatten_with_path(template)
+        sh_leaves = None
+        if shardings is not None:
+            sh_leaves = [s for _, s in jax.tree_util.tree_flatten_with_path(shardings)[0]]
+        leaves = []
+        for i, (path, tmpl) in enumerate(flat_template):
+            key = jax.tree_util.keystr(path)
+            meta = manifest["leaves"][key]
+            arr = np.load(src / meta["file"])
+            if meta["dtype"] in _VIEW_DTYPES:
+                arr = arr.view(ml_dtypes.bfloat16)
+            if list(arr.shape) != list(tmpl.shape):
+                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {tmpl.shape}")
+            if sh_leaves is not None:
+                leaves.append(jax.device_put(arr, sh_leaves[i]))
+            else:
+                leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+        return jax.tree.unflatten(treedef, leaves), step

@@ -1,0 +1,95 @@
+"""HBP-backed sparse linear layers — the paper's technique inside the LM.
+
+At decode, a pruned linear layer's matmul is a batch of SpMVs: the weight
+matrix is magnitude-sparsified offline, converted once to the HBP tile
+format (2D partition + nonlinear hash reordering), and applied per token
+with the Pallas kernel.  This is the integration point the assignment's
+"first-class feature" requirement refers to: ``examples/serve_pruned.py``
+serves a model whose FFN weights run through this layer.
+
+``SparseLinear.apply`` consumes ``x [tokens, in]`` and returns
+``[tokens, out]`` by running one SpMV per token-row (vmapped over the
+batch; the kernel itself is the per-vector path the paper optimizes).
+For CPU validation the jnp oracle backend is used; on TPU the Pallas
+kernel takes over unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .formats import csr_from_dense
+from .partition import PartitionConfig
+from .tile import HBPTiles, build_tiles
+
+__all__ = ["SparseLinear", "magnitude_prune"]
+
+
+def magnitude_prune(w: np.ndarray, sparsity: float) -> np.ndarray:
+    """Zero the smallest-|w| entries to the requested sparsity."""
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(sparsity)
+    k = int(w.size * sparsity)
+    if k == 0:
+        return w.copy()
+    thresh = np.partition(np.abs(w).reshape(-1), k)[k]
+    out = w.copy()
+    out[np.abs(out) < thresh] = 0.0
+    return out
+
+
+@dataclasses.dataclass
+class SparseLinear:
+    """y = W_sparse @ x with W in HBP tile format (W: [out, in])."""
+
+    tiles: HBPTiles
+    out_features: int
+    in_features: int
+    backend: Literal["pallas", "jnp"] = "jnp"
+
+    @classmethod
+    def from_dense(
+        cls,
+        w: np.ndarray,  # [out, in]
+        *,
+        sparsity: float = 0.9,
+        cfg: PartitionConfig | None = None,
+        backend: Literal["pallas", "jnp"] = "jnp",
+    ) -> "SparseLinear":
+        cfg = cfg or PartitionConfig(row_block=256, col_block=512)
+        pruned = magnitude_prune(np.asarray(w, np.float32), sparsity)
+        csr = csr_from_dense(pruned)
+        tiles = build_tiles(csr, cfg, method="hash")
+        return cls(tiles, w.shape[0], w.shape[1], backend)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        """x: [..., in_features] -> [..., out_features]."""
+        from repro.kernels import device_tiles, hbp_spmv
+
+        dt = device_tiles(self.tiles)
+        lead = x.shape[:-1]
+        flat = x.reshape(-1, self.in_features)
+        strategy = "reference" if self.backend == "jnp" else "fused"
+
+        def one(v):
+            return hbp_spmv(
+                dt,
+                v,
+                strategy=strategy,
+                n_rowgroups=self.tiles.n_rowgroups,
+                n_rows=self.out_features,
+                col_block=self.tiles.cfg.col_block,
+            )
+
+        y = jax.vmap(one)(flat)
+        return y.reshape(*lead, self.out_features)
+
+    def density(self) -> float:
+        return float(np.count_nonzero(self.tiles.data)) / (
+            self.out_features * self.in_features
+        )

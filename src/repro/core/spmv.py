@@ -1,0 +1,69 @@
+"""High-level SpMV API: format construction + dispatch to backends.
+
+``spmv`` dispatches on the container type:
+
+* :class:`~repro.core.formats.CSRMatrix`  — CSR baselines (numpy reference
+  or the jnp segment-sum device path, Algorithm 1).
+* :class:`~repro.core.hbp.HBPMatrix`      — faithful GPU-semantics
+  reference (Algorithm 3).
+* :class:`~repro.core.tile.HBPTiles`      — the production path: Pallas
+  TPU kernel (``backend="pallas"``), its jnp oracle (``backend="jnp"``).
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import CSRMatrix
+from .hbp import HBPMatrix, build_hbp, hbp_spmv_reference
+from .partition import PartitionConfig
+from .tile import HBPTiles, build_tiles
+
+__all__ = [
+    "spmv",
+    "csr_spmv_jnp",
+    "build_hbp",
+    "build_tiles",
+    "PartitionConfig",
+]
+
+
+def csr_spmv_jnp(
+    indptr: jnp.ndarray, indices: jnp.ndarray, data: jnp.ndarray, x: jnp.ndarray, n_rows: int
+) -> jnp.ndarray:
+    """Device CSR SpMV (Algorithm 1) via segment-sum — the CSR baseline of
+    Figs. 8/10 expressed in XLA-native ops."""
+    rows = jnp.cumsum(jnp.zeros(data.shape[0], jnp.int32).at[indptr[1:-1]].add(1))
+    prod = data * x[indices]
+    import jax
+
+    return jax.ops.segment_sum(prod, rows, num_segments=n_rows)
+
+
+def spmv(
+    A,
+    x,
+    *,
+    backend: Literal["auto", "pallas", "jnp", "reference"] = "auto",
+    interpret: bool | None = None,
+):
+    """Sparse matrix–vector product ``A @ x``."""
+    if isinstance(A, CSRMatrix):
+        if backend in ("auto", "reference"):
+            return A.matvec(np.asarray(x))
+        return csr_spmv_jnp(
+            jnp.asarray(A.indptr), jnp.asarray(A.indices), jnp.asarray(A.data), jnp.asarray(x), A.n_rows
+        )
+    if isinstance(A, HBPMatrix):
+        return hbp_spmv_reference(A, np.asarray(x))
+    if isinstance(A, HBPTiles):
+        from repro.kernels import ops
+
+        if backend in ("auto", "pallas"):
+            return ops.hbp_spmv(A, jnp.asarray(x, jnp.float32), interpret=interpret)
+        if backend == "jnp":
+            return ops.hbp_spmv(A, jnp.asarray(x, jnp.float32), strategy="reference")
+        raise ValueError(f"unsupported backend {backend!r} for HBPTiles")
+    raise TypeError(f"unsupported matrix type {type(A)!r}")

@@ -1,0 +1,125 @@
+"""Pallas TPU kernels for HBP SpMV.
+
+Two kernel strategies, both consuming the tile format of
+:mod:`repro.core.tile`:
+
+* :func:`hbp_spmv_fused` — **fused combine** (beyond-paper, TPU-enabled).
+  The grid walks tiles sorted by (row-group, col-block); consecutive tiles
+  of the same row group accumulate into the same output ref, so the
+  "combine part" of Fig. 1 disappears into the SpMV pass.  On the GPU the
+  paper tried this fusion and found atomics too expensive (Discussion
+  section); the TPU's sequential grid gives it for free.
+
+* :func:`hbp_spmv_partials` — **faithful two-phase**: each tile writes its
+  own partial vector; the combine is a separate segment-sum (see
+  ``ops.hbp_spmv(..., strategy="partials")``).  This mirrors the paper's
+  SpMV-part/combine-part split and is kept as the paper-faithful baseline
+  the fused kernel is measured against (EXPERIMENTS.md §Perf).
+
+VMEM budget per grid step (defaults: group=8, lane=128, col_block=4096):
+data tile 8×128×4 B = 4 KiB, col tile 4 KiB, x segment 16 KiB, y block
+32 B — trivially double-buffered in ~128 MiB of VMEM.  The x segment is
+fetched only when ``colblock[t]`` changes (Pallas skips the copy when the
+index map returns the same block), which the (row-group, col-block) sort
+keeps infrequent; this is the VMEM analogue of the paper's shared-memory
+vector-segment reuse.
+
+The gather ``jnp.take(seg, cols)`` maps to Mosaic's dynamic-gather on the
+lane dimension (int32 indices into VMEM).  Kernels are validated against
+``ref.py`` in ``interpret=True`` mode on CPU; TPU is the deployment target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["hbp_spmv_fused", "hbp_spmv_partials"]
+
+
+def _fused_kernel(rowgroup_ref, colblock_ref, first_ref, data_ref, cols_ref, x_ref, y_ref):
+    """One grid step = one tile: y[rowgroup[t]] += (data * x_seg[cols]).sum(lanes)."""
+    t = pl.program_id(0)
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    seg = x_ref[0]  # [col_block] vector segment, VMEM resident
+    gathered = jnp.take(seg, cols_ref[0], axis=0)  # [group, lane]
+    y_ref[0, :] += jnp.sum(data_ref[0] * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rowgroups", "interpret"))
+def hbp_spmv_fused(
+    rowgroup: jax.Array,  # i32[T]
+    colblock: jax.Array,  # i32[T]
+    first: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block]
+    *,
+    n_rowgroups: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused-combine HBP SpMV.  Returns y in hashed row order,
+    shape [n_rowgroups, group]."""
+    T, group, lane = data.shape
+    col_block = x_blocked.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, col_block), lambda t, rg, cb, fs: (cb[t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group), lambda t, rg, cb, fs: (rg[t], 0)),
+    )
+    return pl.pallas_call(
+        _fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rowgroups, group), jnp.float32),
+        interpret=interpret,
+    )(rowgroup, colblock, first, data, cols, x_blocked)
+
+
+def _partials_kernel(colblock_ref, data_ref, cols_ref, x_ref, y_ref):
+    """One grid step = one tile: emit the tile's own partial result."""
+    seg = x_ref[0]
+    gathered = jnp.take(seg, cols_ref[0], axis=0)
+    y_ref[0, :] = jnp.sum(data_ref[0] * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hbp_spmv_partials(
+    colblock: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block]
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """SpMV part only (paper-faithful): per-tile partial vectors
+    [T, group]; the combine part reduces them by row group."""
+    T, group, lane = data.shape
+    col_block = x_blocked.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
+            pl.BlockSpec((1, col_block), lambda t, cb: (cb[t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group), lambda t, cb: (t, 0)),
+    )
+    return pl.pallas_call(
+        _partials_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, group), jnp.float32),
+        interpret=interpret,
+    )(colblock, data, cols, x_blocked)

@@ -1,0 +1,135 @@
+"""Jitted public wrappers around the Pallas SpMV kernels.
+
+``hbp_spmv`` is the production entry point: it stages the host-side tile
+format to the device once (:func:`device_tiles`), pads the dense vector
+into column-block segments, launches the requested kernel strategy and
+undoes the hash permutation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tile import HBPTiles
+
+from . import hbp_spmv as _k
+from . import ref as _ref
+
+__all__ = ["DeviceTiles", "device_tiles", "hbp_spmv", "blocked_vector"]
+
+
+class DeviceTiles(NamedTuple):
+    """Device-resident HBP tile format (a pytree of jnp arrays)."""
+
+    rowgroup: jax.Array  # i32[T]
+    colblock: jax.Array  # i32[T]
+    first: jax.Array  # i32[T]
+    data: jax.Array  # f32[T, group, lane]
+    cols: jax.Array  # i32[T, group, lane]
+    perm: jax.Array  # i32[padded_rows]
+    visited: jax.Array  # f32[n_rowgroups, 1]: 0 for all-zero row groups
+    # (the hash clusters empty rows, so whole groups can have no tiles;
+    # Pallas leaves never-visited output blocks undefined — mask them)
+
+
+def device_tiles(tiles: HBPTiles) -> DeviceTiles:
+    import numpy as np
+
+    visited = np.zeros((tiles.n_rowgroups, 1), np.float32)
+    visited[tiles.rowgroup] = 1.0
+    return DeviceTiles(
+        rowgroup=jnp.asarray(tiles.rowgroup, jnp.int32),
+        colblock=jnp.asarray(tiles.colblock, jnp.int32),
+        first=jnp.asarray(tiles.first, jnp.int32),
+        data=jnp.asarray(tiles.data, jnp.float32),
+        cols=jnp.asarray(tiles.cols, jnp.int32),
+        perm=jnp.asarray(tiles.perm, jnp.int32),
+        visited=jnp.asarray(visited),
+    )
+
+
+def blocked_vector(x: jax.Array, col_block: int) -> jax.Array:
+    """Pad x to a multiple of ``col_block`` and reshape into segments."""
+    n = x.shape[0]
+    n_blocks = -(-n // col_block)
+    pad = n_blocks * col_block - n
+    return jnp.pad(x, (0, pad)).reshape(n_blocks, col_block)
+
+
+def _default_interpret() -> bool:
+    # Pallas TPU kernels execute natively on TPU; everywhere else we run the
+    # kernel body in interpret mode (bit-accurate, Python-evaluated).
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rowgroups", "n_rows", "strategy", "interpret")
+)
+def _hbp_spmv_device(
+    dt: DeviceTiles,
+    x_blocked: jax.Array,
+    *,
+    n_rowgroups: int,
+    n_rows: int,
+    strategy: str,
+    interpret: bool,
+) -> jax.Array:
+    if dt.data.shape[0] == 0:  # empty matrix: no tiles, y == 0
+        return jnp.zeros((n_rows,), jnp.float32)
+    if strategy == "fused":
+        y_hashed = _k.hbp_spmv_fused(
+            dt.rowgroup, dt.colblock, dt.first, dt.data, dt.cols, x_blocked,
+            n_rowgroups=n_rowgroups, interpret=interpret,
+        )
+        y_hashed = jnp.where(dt.visited > 0, y_hashed, 0.0)
+    elif strategy == "partials":
+        # paper-faithful split: SpMV part (kernel) + combine part (XLA)
+        contrib = _k.hbp_spmv_partials(
+            dt.colblock, dt.data, dt.cols, x_blocked, interpret=interpret
+        )
+        y_hashed = jax.ops.segment_sum(contrib, dt.rowgroup, num_segments=n_rowgroups)
+    elif strategy == "reference":
+        y_hashed = _ref.hbp_spmv_hashed_ref(
+            dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
+            n_rowgroups=n_rowgroups,
+        )
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return _ref.unpermute(y_hashed, dt.perm, n_rows)
+
+
+def hbp_spmv(
+    tiles: HBPTiles | DeviceTiles,
+    x: jax.Array,
+    *,
+    strategy: Literal["fused", "partials", "reference"] = "fused",
+    interpret: bool | None = None,
+    n_rowgroups: int | None = None,
+    n_rows: int | None = None,
+    col_block: int | None = None,
+) -> jax.Array:
+    """HBP SpMV: ``y = A @ x`` with A in HBP tile format."""
+    if isinstance(tiles, HBPTiles):
+        meta = (tiles.n_rowgroups, tiles.shape[0], tiles.cfg.col_block)
+        dt = device_tiles(tiles)
+    else:
+        if None in (n_rowgroups, n_rows, col_block):
+            raise ValueError("DeviceTiles input requires explicit metadata")
+        meta = (n_rowgroups, n_rows, col_block)
+        dt = tiles
+    n_rowgroups, n_rows, col_block = meta
+    if interpret is None:
+        interpret = _default_interpret()
+    x_blocked = blocked_vector(jnp.asarray(x, jnp.float32), col_block)
+    return _hbp_spmv_device(
+        dt,
+        x_blocked,
+        n_rowgroups=n_rowgroups,
+        n_rows=n_rows,
+        strategy=strategy,
+        interpret=interpret,
+    )

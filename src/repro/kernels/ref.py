@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references with
+``numpy.testing.assert_allclose`` across shape/dtype/sparsity sweeps
+(tests/test_kernels.py); the references themselves are validated against
+the dense matmul and the faithful GPU-semantics implementation
+(:func:`repro.core.hbp.hbp_spmv_reference`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["tile_contrib_ref", "hbp_spmv_hashed_ref", "unpermute"]
+
+
+def tile_contrib_ref(
+    colblock: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block]
+) -> jax.Array:
+    """Per-tile partial results [T, group] — oracle of the SpMV part."""
+    segs = x_blocked[colblock]  # [T, col_block]
+    T, group, lane = data.shape
+    gathered = jnp.take_along_axis(
+        segs[:, None, :], cols.reshape(T, 1, group * lane), axis=2
+    ).reshape(T, group, lane)
+    return jnp.sum(data * gathered, axis=2)
+
+
+def hbp_spmv_hashed_ref(
+    rowgroup: jax.Array,
+    colblock: jax.Array,
+    data: jax.Array,
+    cols: jax.Array,
+    x_blocked: jax.Array,
+    *,
+    n_rowgroups: int,
+) -> jax.Array:
+    """Full SpMV + combine oracle, output in hashed row order
+    [n_rowgroups, group]."""
+    contrib = tile_contrib_ref(colblock, data, cols, x_blocked)
+    return jax.ops.segment_sum(contrib, rowgroup, num_segments=n_rowgroups)
+
+
+def unpermute(y_hashed: jax.Array, perm: jax.Array, n_rows: int) -> jax.Array:
+    """Undo the hash reordering: slot s computed original row ``perm[s]``.
+
+    ``y_hashed`` is [n_rowgroups, group]; ``perm`` maps slots (flattened
+    hashed order) to original row ids over the padded row space.
+    """
+    flat = y_hashed.reshape(-1)
+    padded = jnp.zeros(perm.shape[0], dtype=y_hashed.dtype).at[perm].set(flat)
+    return padded[:n_rows]

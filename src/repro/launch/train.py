@@ -1,0 +1,59 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 50 \
+        --smoke --batch 8 --seq 128
+
+``--smoke`` runs the reduced same-family config on the host (CPU-friendly);
+without it the full config is built and the step is jit-compiled against
+the production mesh (requires the corresponding device count).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.data.pipeline import DataConfig
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", help="reduced config on host")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg)
+    n = sum(int(v.size) for v in jax.tree.leaves(model.abstract()))
+    print(f"arch={cfg.name} params={n/1e6:.1f}M")
+
+    trainer = Trainer(
+        model,
+        AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 10, 1), decay_steps=args.steps),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch),
+        TrainerConfig(
+            steps=args.steps,
+            log_every=max(args.steps // 10, 1),
+            checkpoint_every=max(args.steps // 2, 1),
+            checkpoint_dir=args.ckpt,
+            n_microbatch=args.microbatch,
+        ),
+    )
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

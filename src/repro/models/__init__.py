@@ -1,0 +1,29 @@
+# Model zoo substrate: parameter/sharding system and the layer families
+# (GQA/MLA attention, MoE, Mamba-2 SSD, hybrid stacks, enc-dec).
+from .model import Model, build_model, input_specs
+from .params import (
+    DECODE_RULES,
+    TRAIN_RULES,
+    ParamDef,
+    Rules,
+    abstract_params,
+    init_params,
+    param_specs,
+    shard,
+    sharding_ctx,
+)
+
+__all__ = [
+    "Model",
+    "build_model",
+    "input_specs",
+    "ParamDef",
+    "Rules",
+    "TRAIN_RULES",
+    "DECODE_RULES",
+    "abstract_params",
+    "init_params",
+    "param_specs",
+    "shard",
+    "sharding_ctx",
+]

@@ -1,0 +1,298 @@
+"""Attention: GQA (dense + blockwise online-softmax) and MLA (DeepSeek-V2).
+
+Prefill/training uses a double-chunked blockwise attention (online softmax,
+``lax.scan`` over query and key chunks) above a size threshold, keeping the
+scores working set at ``B·Cq·H·Ckv`` — the jnp-native equivalent of flash
+attention and the reason ``prefill_32k`` fits.  Decode attends densely over
+the KV cache (one query row; memory-bound by design).
+
+MLA implements the *absorbed* decode path: the cache stores only the latent
+``c_kv`` (+ rope key), queries are projected into the latent space, and the
+value up-projection happens after the softmax — the 576 B/token cache that
+is MLA's reason to exist.
+
+No Pallas kernel here on purpose: the paper's hot-spot is SpMV; attention
+stays XLA-native (DESIGN.md §Kernels).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import rope
+from .params import ParamDef, shard
+
+__all__ = ["attention_defs", "attention_apply", "init_attn_cache"]
+
+_DENSE_LIMIT = 1 << 22  # Sq*Skv above this -> blockwise path
+_NEG = -1e30
+
+
+def attention_defs(cfg: ModelConfig, *, cross: bool = False) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H = cfg.padded_heads  # llava: 56 -> 64 so heads shard (DESIGN.md §2)
+    if cfg.mla_kv_lora and not cross:
+        r, rd = cfg.mla_kv_lora, cfg.mla_rope_dim
+        return {
+            "wq": ParamDef((d, H, hd + rd), ("embed", "heads", None)),
+            "wkv_a": ParamDef((d, r + rd), ("embed", None)),
+            "wk_b": ParamDef((r, H, hd), (None, "heads", None)),
+            "wv_b": ParamDef((r, H, hd), (None, "heads", None)),
+            "wo": ParamDef((H, hd, d), ("heads", None, "embed")),
+        }
+    return {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", None)),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", None)),
+        "wo": ParamDef((H, hd, d), ("heads", None, "embed")),
+    }
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Zeroed decode cache + logical axis names (for spec derivation)."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.mla_kv_lora:
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.mla_kv_lora), dt),
+            "kpe": jnp.zeros((batch, max_len, cfg.mla_rope_dim), dt),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+    }
+
+
+ATTN_CACHE_LOGICAL = {
+    "ckv": ("cache_batch", None, "kv_embed"),
+    "kpe": ("cache_batch", None, None),
+    "k": ("cache_batch", None, "kv_heads", "head_dim"),
+    "v": ("cache_batch", None, "kv_heads", "head_dim"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _dense_attend(q, k, v, q_pos, k_pos, causal: bool, k_valid=None):
+    """Flat-head attention.  q: [B,Sq,H,hd]; k: [B,Skv,H,hdk]; v: [B,Skv,H,hdv].
+
+    Heads stay one flat dim end to end: a (KH, G) grouped reshape defeats
+    GSPMD head sharding whenever KH or G does not divide the model axis
+    (nemotron: 96 -> (8,12) on a 16-wide axis replicated all heads).  GQA
+    expands K/V to H heads with a cheap repeat instead (the repeat's
+    backward reduces grads back to the KV heads automatically)."""
+    scale = 1.0 / float(q.shape[-1]) ** 0.5
+    s = jnp.einsum("bqhd,bthd->bhqt", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    mask = jnp.ones(s.shape[-2:], dtype=bool)
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]
+    if k_valid is not None:
+        mask = mask & k_valid[None, :]
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqt,bthd->bqhd", p.astype(v.dtype), v)
+
+
+def _blockwise_attend(q, k, v, q_pos, k_pos, causal: bool, q_chunk=512, kv_chunk=1024):
+    """Online-softmax double-chunked attention (flash-style, flat heads)."""
+    B, Sq, H, hd = q.shape
+    Skv, hdv = k.shape[1], v.shape[-1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, q_chunk, Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / float(hd) ** 0.5
+
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    qp = q_pos.reshape(nq, q_chunk)
+    ks = jnp.moveaxis(k.reshape(B, nk, kv_chunk, H, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kv_chunk, H, hdv), 1, 0)
+    kp = k_pos.reshape(nk, kv_chunk)
+
+    def q_body(_, qc_in):
+        qc, qpc = qc_in  # [B,Cq,H,hd], [Cq]
+
+        def kv_body(carry, kc_in):
+            m, l, acc = carry
+            kc, vc, kpc = kc_in
+            s = jnp.einsum(
+                "bqhd,bthd->bhqt", qc, kc, preferred_element_type=jnp.float32
+            ) * scale
+            if causal:
+                s = jnp.where(qpc[:, None] >= kpc[None, :], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqt,bthd->bhqd", p.astype(vc.dtype), vc)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hdv), v.dtype)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks, vs, kp))
+        out = acc / jnp.maximum(l, 1e-20)[..., None].astype(acc.dtype)
+        return None, jnp.einsum("bhqd->bqhd", out)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, qp))
+    # outs: [nq, B, Cq, H, hdv] -> [B, Sq, H, hdv]
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hdv)
+
+
+def _attend(q, k, v, q_pos, k_pos, causal, k_valid=None):
+    Sq, Skv = q.shape[1], k.shape[1]
+    if Sq * Skv <= _DENSE_LIMIT or Sq == 1:
+        return _dense_attend(q, k, v, q_pos, k_pos, causal, k_valid)
+    return _blockwise_attend(q, k, v, q_pos, k_pos, causal)
+
+
+def _expand_kv(k: jax.Array, groups: int) -> jax.Array:
+    """[B,S,KH,hd] -> [B,S,KH*G,hd] (GQA expansion, flat heads)."""
+    if groups == 1:
+        return k
+    B, S, KH, hd = k.shape
+    return jnp.repeat(k, groups, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MLA apply
+# ---------------------------------------------------------------------------
+
+
+def _gqa(p, x, cfg: ModelConfig, pos0, cache, kv_x, causal, is_cross=False):
+    B, S, _ = x.shape
+    KH, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    H = p["wq"].shape[1]  # padded head count (from the weights)
+    G = H // KH
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_pos = pos0 + jnp.arange(S)
+    is_cross = is_cross or kv_x is not None
+
+    if is_cross and cache is not None and S == 1:
+        # cross-attention decode: cache holds the encoder K/V, read-only
+        k, v, k_valid = cache["k"], cache["v"], None
+        k_pos = jnp.arange(k.shape[1])
+        new_cache = cache
+    elif is_cross and cache is not None:
+        # cross-attention prefill: compute encoder K/V once, store them
+        k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+        pad = cache["k"].shape[1] - k.shape[1]
+        new_cache = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["k"].dtype),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["v"].dtype),
+        }
+        k_pos = jnp.arange(k.shape[1])
+        k_valid = None
+    else:
+        src = kv_x if is_cross else x
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+        if not is_cross:
+            q = rope(q, q_pos, cfg.rope_theta)
+            k = rope(k, q_pos, cfg.rope_theta)
+        k_valid = None
+        if cache is None:
+            k_pos = q_pos
+            new_cache = None
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0)
+            )
+            new_cache = {"k": ck, "v": cv}
+            if S == 1:  # decode: attend over the whole cache, mask invalid
+                k, v = ck, cv
+                k_pos = jnp.arange(k.shape[1])
+                k_valid = k_pos <= pos0
+            else:  # prefill: attend over the fresh keys only
+                k_pos = q_pos
+
+    kf = _expand_kv(k.astype(q.dtype), G)
+    vf = _expand_kv(v.astype(q.dtype), G)
+    out = _attend(q, kf, vf, q_pos, k_pos, causal and not is_cross, k_valid)
+    y = jnp.einsum("bqhd,hdo->bqo", out, p["wo"])
+    return y, new_cache
+
+
+def _mla(p, x, cfg: ModelConfig, pos0, cache, causal):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H = p["wq"].shape[1]
+    r, rd = cfg.mla_kv_lora, cfg.mla_rope_dim
+    q_pos = pos0 + jnp.arange(S)
+
+    qfull = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_pe = qfull[..., :hd], rope(qfull[..., hd:], q_pos, cfg.rope_theta, head_axes=1)
+    ckv_full = x @ p["wkv_a"]
+    c_kv, k_pe = ckv_full[..., :r], rope(ckv_full[..., r:], q_pos, cfg.rope_theta, head_axes=0)
+
+    if cache is not None:
+        n_ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos0, 0)
+        )
+        n_kpe = jax.lax.dynamic_update_slice(
+            cache["kpe"], k_pe.astype(cache["kpe"].dtype), (0, pos0, 0)
+        )
+        new_cache = {"ckv": n_ckv, "kpe": n_kpe}
+    else:
+        new_cache = None
+
+    if cache is not None and S == 1:
+        # absorbed decode: stay in the latent space, cache is 576 B/token
+        ckv_t, kpe_t = new_cache["ckv"], new_cache["kpe"]
+        Skv = ckv_t.shape[1]
+        scale = 1.0 / float(hd + rd) ** 0.5
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, p["wk_b"])
+        s = (
+            jnp.einsum("bqhr,btr->bhqt", q_lat, ckv_t, preferred_element_type=jnp.float32)
+            + jnp.einsum("bqhp,btp->bhqt", q_pe, kpe_t, preferred_element_type=jnp.float32)
+        ) * scale
+        valid = jnp.arange(Skv) <= pos0
+        s = jnp.where(valid[None, None, None, :], s, _NEG)
+        attn = jax.nn.softmax(s, axis=-1)
+        lat = jnp.einsum("bhqt,btr->bqhr", attn.astype(ckv_t.dtype), ckv_t)
+        heads = jnp.einsum("bqhr,rhd->bqhd", lat, p["wv_b"])
+    else:
+        # train/prefill: expand per-head keys/values from the latent
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["wk_b"])
+        vv = jnp.einsum("bsr,rhd->bshd", c_kv, p["wv_b"])
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, rd))], -1)
+        q = jnp.concatenate([q_nope, q_pe], -1)  # [B,S,H,hd+rd]
+        heads = _attend(q, k.astype(q.dtype), vv.astype(q.dtype), q_pos, q_pos, causal)
+    y = jnp.einsum("bqhd,hdo->bqo", heads, p["wo"])
+    return y, new_cache
+
+
+def attention_apply(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    pos0: jax.Array | int = 0,
+    cache: Optional[Dict] = None,
+    kv_x: Optional[jax.Array] = None,
+    causal: bool = True,
+    cross: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Self- or cross-attention with optional decode cache.
+
+    ``cross=True`` (or a ``kv_x``) switches to cross-attention: K/V come
+    from the encoder output at prefill and from the read-only cache at
+    decode (when ``kv_x`` is no longer available).
+    """
+    if cfg.mla_kv_lora and not cross and kv_x is None:
+        return _mla(p, x, cfg, pos0, cache, causal)
+    return _gqa(p, x, cfg, pos0, cache, kv_x, causal, is_cross=cross)

@@ -1,0 +1,174 @@
+"""Shared building blocks: norms, rotary embeddings, MLPs, embeddings.
+
+All layers are pure functions ``apply(params, x, cfg, ...)`` over ParamDef
+trees — no module framework, so the same code paths serve real arrays and
+``ShapeDtypeStruct`` tracing in the AOT dry-run.  Math in bf16 params /
+f32 accumulation throughout.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .params import ParamDef, shard
+
+__all__ = [
+    "grad_dtype_guard",
+    "rmsnorm",
+    "nonparam_layernorm",
+    "norm_defs",
+    "apply_norm",
+    "rope",
+    "mlp_defs",
+    "mlp_apply",
+    "embed_defs",
+    "embed_apply",
+    "logits_apply",
+]
+
+
+@jax.custom_vjp
+def grad_dtype_guard(x: jax.Array) -> jax.Array:
+    """Identity forward; casts the COTANGENT back to x's dtype in backward.
+
+    Attention/score einsums use ``preferred_element_type=f32``; their
+    transpose rules emit f32 cotangents, which then propagate f32 through
+    the whole backward residual stream (2x activation-grad memory and wire
+    bytes — measured as f32 copies of every remat boundary on nemotron).
+    Clamping the residual-stream cotangent at each block boundary keeps
+    the backward in bf16 while the softmax math stays f32."""
+    return x
+
+
+def _guard_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)  # dtype carrier (residuals must be jax types)
+
+
+def _guard_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+grad_dtype_guard.defvjp(_guard_fwd, _guard_bwd)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * rms) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparam_layernorm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo's non-parametric LayerNorm: no learnable scale or bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    if cfg.norm == "nonparam_ln":
+        return {}
+    return {"w": ParamDef((cfg.d_model,), ("embed",), init="ones")}
+
+
+def apply_norm(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm == "nonparam_ln":
+        return nonparam_layernorm(x)
+    return rmsnorm(x, p["w"])
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float, head_axes: int = 1) -> jax.Array:
+    """Rotary embedding over the last dim.
+
+    ``positions`` ([S] or [B, S]) aligns with x's sequence dim;
+    ``head_axes`` is the number of head dims between sequence and head_dim
+    (1 for [B,S,H,hd], 0 for the headless MLA rope key [B,S,rd])."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # pos.shape + [half]
+    ang = ang.reshape(ang.shape[:-1] + (1,) * head_axes + (half,))
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "relu2":  # non-gated (Nemotron-4 squared ReLU)
+        return {
+            "w1": ParamDef((d, f), ("embed", "mlp")),
+            "w2": ParamDef((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wg": ParamDef((d, f), ("embed", "mlp")),
+        "w1": ParamDef((d, f), ("embed", "mlp")),
+        "w2": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def _activate(h: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        return jax.nn.silu(h)
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    if act == "relu2":
+        r = jnp.maximum(h, 0.0)
+        return r * r
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def mlp_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.act == "relu2":
+        return _activate(x @ p["w1"], "relu2") @ p["w2"]
+    return (_activate(x @ p["wg"], cfg.act) * (x @ p["w1"])) @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    v = cfg.padded_vocab
+    defs = {"tok": ParamDef((v, cfg.d_model), ("vocab", "embed"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, v), ("embed", "vocab"), scale=0.02)
+    return defs
+
+
+def embed_apply(p: Dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if tokens.shape[-1] == 1:
+        # decode: one token, no gradient — a gather is optimal
+        x = jnp.take(p["tok"], tokens, axis=0)
+    else:
+        # train/prefill: one-hot contraction instead of gather.  The gather
+        # backward is a scatter-add into the full [vocab, d] table, which
+        # GSPMD materialises REPLICATED (17.6 GiB/device f32 on nemotron);
+        # the einsum wgrad is an ordinary sharded matmul.  The extra fwd
+        # FLOPs are ~3% of one MLP layer.
+        onehot = jax.nn.one_hot(tokens, cfg.padded_vocab, dtype=p["tok"].dtype)
+        x = jnp.einsum("bsv,vd->bsd", onehot, p["tok"])
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def logits_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        # mask pad columns: no effect on CE's logsumexp, never sampled
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab, logits, -1e30)
+    return shard(logits, "batch", "seq", "vocab")

@@ -1,0 +1,184 @@
+"""Top-level model API: build, forward, caches, input specs.
+
+``build_model(cfg)`` returns a :class:`Model` holding the ParamDef tree;
+``Model.forward`` covers all four execution modes used by the launchers:
+
+* train / eval        — full sequence, no cache;
+* prefill             — full sequence, writes the decode cache;
+* decode              — one token against the cache (``tokens [B, 1]``);
+* encoder-decoder     — frames → encoder, tokens → decoder w/ cross-attn.
+
+``input_specs`` produces ``ShapeDtypeStruct`` stand-ins for every model
+input of an (arch × shape) cell — the dry-run lowers against these, so no
+host allocation ever happens for the full-size configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from .layers import embed_apply, embed_defs, logits_apply, apply_norm, norm_defs
+from .params import (
+    Rules,
+    abstract_params,
+    init_params,
+    logical_spec,
+    param_specs,
+)
+from .transformer import (
+    LogicalAxes,
+    init_stack_cache,
+    stack_apply,
+    stack_cache_logical,
+    stack_defs_for,
+)
+
+__all__ = ["Model", "build_model", "input_specs"]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    defs: Dict[str, Any]
+
+    # ------------------------------------------------------------------ build
+    def init(self, key: jax.Array):
+        return init_params(self.defs, key, dtype=_dtype(self.cfg))
+
+    def abstract(self):
+        return abstract_params(self.defs, dtype=_dtype(self.cfg))
+
+    def specs(self, rules: Rules, mesh):
+        return param_specs(self.defs, rules, mesh)
+
+    # ------------------------------------------------------------------ cache
+    def init_cache(self, batch: int, max_len: int, cross_len: int | None = None):
+        """Decode cache.  ``cross_len`` must equal the exact encoder output
+        length for enc-dec models (padded cross keys would otherwise leak
+        into the softmax); defaults to ``max_len``."""
+        cfg = self.cfg
+        cross = (cross_len if cross_len is not None else max_len) if cfg.is_encdec else 0
+        cache = {
+            "dec": init_stack_cache(
+                cfg, n_layers=cfg.n_layers, batch=batch, max_len=max_len,
+                cross_len=cross,
+            )
+        }
+        return cache
+
+    def abstract_cache(self, batch: int, max_len: int, cross_len: int | None = None):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len, cross_len))
+
+    def cache_specs(self, rules: Rules, mesh, batch: int, max_len: int):
+        shapes = self.abstract_cache(batch, max_len)
+        logical = {
+            "dec": stack_cache_logical(
+                self.cfg, n_layers=self.cfg.n_layers, cross=self.cfg.is_encdec
+            )
+        }
+        is_leaf = lambda v: isinstance(v, LogicalAxes)
+        return jax.tree.map(
+            lambda s, l: logical_spec(s.shape, l.axes, rules, mesh),
+            shapes,
+            logical,
+            is_leaf=lambda v: isinstance(v, (LogicalAxes, jax.ShapeDtypeStruct)),
+        )
+
+    # ---------------------------------------------------------------- forward
+    def encode(self, params, frames: jax.Array, remat: bool = False) -> jax.Array:
+        """Encoder stack over stub frame embeddings [B, S_enc, D]."""
+        cfg = self.cfg
+        x = frames.astype(_dtype(cfg))
+        x, _, _ = stack_apply(
+            params["enc"], x, cfg, n_layers=cfg.encoder_layers,
+            causal=False, remat=remat,
+        )
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    def forward(
+        self,
+        params,
+        batch: Dict[str, jax.Array],
+        *,
+        cache: Optional[Dict] = None,
+        pos0: jax.Array | int = 0,
+        remat: bool = False,
+    ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+        """Returns (logits f32 [B,S,V], new_cache, aux_loss)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed_apply(params["embed"], tokens, cfg)
+
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(x.dtype)
+            x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+
+        enc_out = None
+        if cfg.is_encdec:
+            if "enc_out" in batch:
+                enc_out = batch["enc_out"]
+            elif "frames" in batch:
+                enc_out = self.encode(params, batch["frames"], remat=remat)
+            # decode steps read cross-K/V from the cache; enc_out may be None
+
+        x, new_cache, aux = stack_apply(
+            params["dec"], x, cfg, n_layers=cfg.n_layers, pos0=pos0,
+            cache=None if cache is None else cache["dec"],
+            enc_out=enc_out, causal=True, remat=remat, cross=cfg.is_encdec,
+        )
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = logits_apply(params["embed"], x, cfg)
+        return logits, ({"dec": new_cache} if cache is not None else None), aux
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    defs: Dict[str, Any] = {
+        "embed": embed_defs(cfg),
+        "final_norm": norm_defs(cfg),
+        "dec": stack_defs_for(cfg, n_layers=cfg.n_layers, cross=cfg.is_encdec),
+    }
+    if cfg.is_encdec:
+        enc_cfg = dataclasses.replace(
+            cfg, moe_experts=0, attn_every=0, ssm_state=0, family="dense"
+        )
+        defs["enc"] = stack_defs_for(enc_cfg, n_layers=cfg.encoder_layers)
+        defs["enc_norm"] = norm_defs(cfg)
+    return Model(cfg, defs)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    * train   — tokens are both inputs and (shifted) labels;
+    * prefill — the full prompt;
+    * decode  — one new token (the KV/state cache is built separately via
+      ``Model.abstract_cache`` and passed alongside).
+    Modality frontends are stubs: precomputed patch/frame embeddings
+    appear as explicit inputs.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = _dtype(cfg)
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        P = min(cfg.frontend_tokens, S)
+        specs["patch_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), dt)
+    if cfg.is_encdec and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    return specs

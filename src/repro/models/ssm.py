@@ -1,0 +1,201 @@
+"""Mamba-2 blocks via the SSD (state-space duality) chunked algorithm.
+
+Training/prefill uses the chunked-quadratic SSD form: within chunks of
+``cfg.ssm_chunk`` tokens the recurrence is computed as a masked-decay
+matmul (MXU-friendly); across chunks a ``lax.scan`` carries the
+``[heads, state, head_dim]`` recurrent state.  Decode is the O(1)
+recurrent step — the reason SSM/hybrid archs run the ``long_500k`` shape.
+
+Layer structure follows Mamba-2: fused input projection into
+(x, z, B, C, dt), a short causal depthwise conv over [x;B;C], SSD, gated
+RMSNorm, output projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import rmsnorm
+from .params import ParamDef, shard
+
+__all__ = ["mamba_defs", "mamba_apply", "init_mamba_cache", "MAMBA_CACHE_LOGICAL"]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    nh = di // hp
+    return d, di, n, hp, nh
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di, n, hp, nh = _dims(cfg)
+    ch = di + 2 * n  # conv runs over [x; B; C]
+    return {
+        "wx": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wz": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wB": ParamDef((d, n), ("embed", None)),
+        "wC": ParamDef((d, n), ("embed", None)),
+        "wdt": ParamDef((d, nh), ("embed", "ssm_heads")),
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), init="const:-4.6"),  # softplus^-1(0.01)
+        "A_log": ParamDef((nh,), ("ssm_heads",), init="a_log"),
+        "D": ParamDef((nh,), ("ssm_heads",), init="ones"),
+        "conv_w": ParamDef((cfg.ssm_conv, ch), (None, "ssm_conv_ch"), scale=0.5),
+        "conv_b": ParamDef((ch,), ("ssm_conv_ch",), init="zeros"),
+        "norm_w": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "wout": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int):
+    d, di, n, hp, nh = _dims(cfg)
+    ch = di + 2 * n
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, ch), dt),
+        "state": jnp.zeros((batch, nh, n, hp), jnp.float32),
+    }
+
+
+MAMBA_CACHE_LOGICAL = {
+    "conv": ("cache_batch", None, "ssm_conv_ch"),
+    "state": ("cache_batch", "ssm_heads", None, None),
+}
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array, history: Optional[jax.Array]):
+    """Depthwise causal conv, kernel K small (4): sum of shifted slices.
+
+    ``history`` is the last K-1 inputs from a previous segment (decode/
+    prefill continuation) or None (zero history)."""
+    B, S, CH = xBC.shape
+    K = w.shape[0]
+    if history is None:
+        history = jnp.zeros((B, K - 1, CH), xBC.dtype)
+    padded = jnp.concatenate([history.astype(xBC.dtype), xBC], axis=1)
+    out = sum(
+        padded[:, k : k + S, :].astype(jnp.float32) * w[k].astype(jnp.float32)
+        for k in range(K)
+    ) + b.astype(jnp.float32)
+    new_history = padded[:, -(K - 1) :, :] if K > 1 else history
+    return jax.nn.silu(out).astype(xBC.dtype), new_history
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, nh, hp]
+    dt: jax.Array,  # [B, S, nh]  (post-softplus, > 0)
+    A: jax.Array,  # [nh]  (< 0)
+    Bm: jax.Array,  # [B, S, n]
+    Cm: jax.Array,  # [B, S, n]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, nh, n, hp]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y [B,S,nh,hp], final_state)."""
+    B, S, nh, hp = x.shape
+    n = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    xc = x.reshape(B, nc, Q, nh, hp).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, nh).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, n).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, n).astype(jnp.float32)
+
+    a = dtc * A  # [B,nc,Q,nh], negative log-decay increments
+    a_cs = jnp.cumsum(a, axis=2)
+
+    # --- intra-chunk (quadratic within Q, MXU matmuls)
+    diff = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]  # [B,nc,Q,Q,nh]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    G = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    M = G[..., None] * L
+    y_diag = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", M, dtc, xc)
+
+    # --- chunk boundary states
+    a_sum = a_cs[:, :, -1, :]  # [B,nc,nh]
+    decay_out = jnp.exp(a_sum[:, :, None, :] - a_cs)  # [B,nc,Q,nh]
+    S_c = jnp.einsum("bckn,bckh,bckhp->bchnp", Bc, decay_out * dtc, xc)
+
+    # --- inter-chunk recurrence
+    S0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((B, nh, n, hp), jnp.float32)
+    )
+
+    def step(S_prev, inp):
+        S_cur, decay = inp  # [B,nh,n,hp], [B,nh]
+        S_new = S_prev * jnp.exp(decay)[:, :, None, None] + S_cur
+        return S_new, S_prev
+
+    xs = (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(a_sum, 1, 0))
+    S_last, S_prevs = jax.lax.scan(step, S0, xs)
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # [B,nc,nh,n,hp]
+
+    y_off = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc, S_prevs, jnp.exp(a_cs))
+    y = (y_diag + y_off).reshape(B, Sp, nh, hp)[:, :S]
+    return y, S_last
+
+
+def mamba_apply(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Mamba-2 block.  [B,S,D] -> [B,S,D]; decode when S == 1 and cache."""
+    B, S, _ = x.shape
+    d, di, n, hp, nh = _dims(cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [nh]
+
+    xi = x @ p["wx"]
+    z = x @ p["wz"]
+    Bm = x @ p["wB"]
+    Cm = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    xBC = jnp.concatenate([xi, Bm.astype(xi.dtype), Cm.astype(xi.dtype)], axis=-1)
+
+    history = cache["conv"] if cache is not None else None
+    conv_out, new_history = _causal_conv(xBC, p["conv_w"], p["conv_b"], history)
+    xc, Bc, Cc = conv_out[..., :di], conv_out[..., di : di + n], conv_out[..., di + n :]
+    xh = xc.reshape(B, S, nh, hp)
+
+    if cache is not None and S == 1:
+        # O(1) recurrent decode step
+        st = cache["state"]  # [B,nh,n,hp] f32
+        dt1 = dt[:, 0]  # [B,nh]
+        decay = jnp.exp(dt1 * A)  # [B,nh]
+        upd = jnp.einsum(
+            "bn,bh,bhp->bhnp",
+            Bc[:, 0].astype(jnp.float32),
+            dt1,
+            xh[:, 0].astype(jnp.float32),
+        )
+        st = st * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), st)
+        y = y + p["D"].astype(jnp.float32)[:, None] * xh[:, 0].astype(jnp.float32)
+        y = y[:, None]  # [B,1,nh,hp]
+        new_cache = {"conv": new_history, "state": st}
+    else:
+        init_state = cache["state"] if cache is not None else None
+        y, S_last = ssd_chunked(xh, dt, A, Bc, Cc, cfg.ssm_chunk, init_state)
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        new_cache = {"conv": new_history, "state": S_last} if cache is not None else None
+
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["wout"], new_cache

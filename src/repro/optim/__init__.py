@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_update, init_opt_state, opt_state_specs
+from .compression import TopKCompressor

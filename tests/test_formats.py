@@ -1,0 +1,56 @@
+"""CSR/COO containers and the 2D partition (paper §III-A)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CSRMatrix, csr_from_dense, Partition2D, PartitionConfig
+from repro.core.formats import COOMatrix, csr_from_coo
+from repro.core.partition import count_block_nnz
+
+
+@given(st.integers(2, 40), st.integers(2, 40), st.floats(0.0, 0.6), st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_csr_dense_roundtrip(m, k, density, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((m, k)) * (rng.random((m, k)) < density)
+    csr = csr_from_dense(dense)
+    assert np.allclose(csr.to_dense(), dense)
+    x = rng.standard_normal(k)
+    assert np.allclose(csr.matvec(x), dense @ x, atol=1e-10)
+
+
+def test_coo_duplicate_sum():
+    coo = COOMatrix([0, 0, 1], [1, 1, 0], [1.0, 2.0, 3.0], (2, 2))
+    csr = csr_from_coo(coo)
+    assert np.allclose(csr.to_dense(), [[0.0, 3.0], [3.0, 0.0]])
+
+
+@given(st.integers(5, 60), st.integers(5, 80), st.integers(0, 4))
+@settings(max_examples=30, deadline=None)
+def test_block_counts_match_bruteforce(m, k, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((m, k)) * (rng.random((m, k)) < 0.2)
+    csr = csr_from_dense(dense)
+    cfg = PartitionConfig(row_block=16, col_block=16, group=4, lane=8)
+    counts = count_block_nnz(csr, cfg)
+    nbc = -(-k // 16)
+    for r in range(m):
+        for bj in range(nbc):
+            expect = np.count_nonzero(dense[r, bj * 16 : (bj + 1) * 16])
+            assert counts[r, bj] == expect
+
+
+def test_partition_block_entries_cover_all(rng):
+    dense = rng.standard_normal((100, 150)) * (rng.random((100, 150)) < 0.1)
+    csr = csr_from_dense(dense)
+    cfg = PartitionConfig(row_block=32, col_block=64, group=8, lane=16)
+    part = Partition2D.build(csr, cfg)
+    nbr, nbc = part.grid
+    total = 0
+    recon = np.zeros_like(dense)
+    for bi in range(nbr):
+        for bj in range(nbc):
+            rows, cols, data = part.block_entries(bi, bj)
+            total += data.size
+            recon[rows + bi * 32, cols + bj * 64] += data
+    assert total == csr.nnz
+    assert np.allclose(recon, dense)

@@ -1,0 +1,61 @@
+"""Mixed execution allocation (paper §III-C) — static competitive replay."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import contiguous_schedule, lpt_schedule, mixed_schedule
+
+
+@given(
+    st.lists(st.floats(0.01, 100.0), min_size=1, max_size=400),
+    st.integers(1, 32),
+)
+@settings(max_examples=50, deadline=None)
+def test_schedules_cover_all_blocks(costs, workers):
+    costs = np.asarray(costs)
+    for sched in (
+        contiguous_schedule(costs, workers),
+        lpt_schedule(costs, workers),
+        mixed_schedule(costs, workers, n_cols=7),
+    ):
+        got = sorted(b for a in sched.assignment for b in a)
+        assert got == list(range(costs.size))
+
+
+def test_lpt_beats_contiguous_on_skew(rng):
+    costs = rng.pareto(1.2, size=512) + 0.05
+    c = contiguous_schedule(costs, 16).makespan_ratio
+    l = lpt_schedule(costs, 16).makespan_ratio
+    assert l <= c + 1e-9
+
+
+def test_lpt_within_4_3_of_optimal(rng):
+    """Graham's bound: LPT makespan <= (4/3 - 1/3m) * OPT."""
+    for _ in range(10):
+        costs = rng.random(64) + 0.01
+        m = 8
+        sched = lpt_schedule(costs, m)
+        opt_lb = max(costs.max(), costs.sum() / m)  # lower bound on OPT
+        assert sched.loads.max() <= (4 / 3) * opt_lb + 1e-9
+
+
+def test_mixed_fixed_part_prefers_column_runs(rng):
+    """Fixed-phase blocks on one worker should show same-column runs
+    (vector segment reuse, paper Fig. 5)."""
+    nbr, nbc = 16, 8
+    costs = np.ones(nbr * nbc)
+    sched = mixed_schedule(costs, 4, n_cols=nbc, fixed_fraction=1.0)
+    for w, blocks in enumerate(sched.assignment):
+        cols = [b % nbc for b in blocks]
+        # runs of equal column ids: number of transitions far below random
+        transitions = sum(1 for a, b in zip(cols, cols[1:]) if a != b)
+        assert transitions <= len(cols) / 4
+
+
+def test_padded_schedule_dense(rng):
+    costs = rng.random(37)
+    sched = mixed_schedule(costs, 8, n_cols=5)
+    padded = sched.padded()
+    assert padded.shape[0] == 8
+    valid = padded[padded >= 0]
+    assert sorted(valid.tolist()) == list(range(37))
