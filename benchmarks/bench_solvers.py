@@ -1,0 +1,164 @@
+"""Workload-level numbers: iterative solvers on top of the HBP kernels.
+
+Raw SpMV microbenchmarks (bench_spmv) measure the format; this module
+measures what the paper motivates the format WITH — iterative algorithms
+whose inner loop is the sparse product.  Per solver we report
+
+* ``iters_per_s`` — solver iterations per second (each iteration is one or
+  two operator applications), the steady-state throughput number;
+* ``time_to_tol`` — wall seconds until the convergence test fires, the
+  end-to-end latency number a user of the workload sees.
+
+As in bench_spmv, HBP runs the jnp oracle of the Pallas kernel on the host
+CPU (interpret-mode timing is meaningless); the multi-RHS rows show the
+SpMM kernel's one-pass-over-tiles advantage at the workload level.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PartitionConfig, build_tiles
+from repro.core.formats import COOMatrix, CSRMatrix, csr_from_coo
+from repro.core.matrices import rmat
+from repro.solvers import aslinearoperator, bicgstab, cg, chebyshev, pagerank, transition_matrix
+
+from .common import emit, timeit
+
+
+def poisson2d(g: int) -> CSRMatrix:
+    """5-point Laplacian on a g x g grid — the canonical SPD CG system."""
+    n = g * g
+    i = np.arange(n)
+    ix, iy = i // g, i % g
+    rows = [i]
+    cols = [i]
+    vals = [np.full(n, 4.0)]
+    for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+        ok = (0 <= ix + dx) & (ix + dx < g) & (0 <= iy + dy) & (iy + dy < g)
+        rows.append(i[ok])
+        cols.append((ix[ok] + dx) * g + iy[ok] + dy)
+        vals.append(np.full(ok.sum(), -1.0))
+    return csr_from_coo(
+        COOMatrix(np.concatenate(rows), np.concatenate(cols), np.concatenate(vals), (n, n))
+    )
+
+
+def shifted(csr: CSRMatrix, sigma: float) -> CSRMatrix:
+    """A + sigma I (diagonal shift to make circuit matrices solvable)."""
+    coo = csr.to_coo()
+    n = csr.n_rows
+    return csr_from_coo(
+        COOMatrix(
+            np.concatenate([coo.row, np.arange(n)]),
+            np.concatenate([coo.col, np.arange(n)]),
+            np.concatenate([coo.data, np.full(n, sigma)]),
+            csr.shape,
+        )
+    )
+
+
+def _solver_row(name: str, run, n_iters_of) -> None:
+    t = timeit(run, repeats=3, warmup=1)
+    res = run()
+    iters = int(n_iters_of(res))
+    emit(
+        f"solvers/{name}",
+        t,
+        f"iters={iters} iters_per_s={iters / t:.1f} time_to_tol_s={t:.4f} "
+        f"converged={bool(res.converged)}",
+    )
+
+
+def main(full: bool = False) -> None:
+    cfg = PartitionConfig()
+    rng = np.random.default_rng(0)
+
+    # --- CG + Chebyshev on the 2D Poisson system (SPD) ---
+    g = 128 if full else 64
+    A = poisson2d(g)
+    tiles = build_tiles(A, cfg)
+    op = aslinearoperator(tiles, strategy="reference")
+    b = rng.standard_normal(A.n_rows).astype(np.float32)
+
+    def run_cg(b=b):
+        r = cg(op, b, tol=1e-5, maxiter=1000)
+        r.x.block_until_ready()
+        return r
+
+    _solver_row(f"cg/poisson{g}x{g}", run_cg, lambda r: r.iterations)
+
+    # blocked RHS: k systems, one SpMM launch per iteration
+    k = 8
+    B = rng.standard_normal((A.n_rows, k)).astype(np.float32)
+
+    def run_cg_block(B=B):
+        r = cg(op, B, tol=1e-5, maxiter=1000)
+        r.x.block_until_ready()
+        return r
+
+    tk = timeit(run_cg_block, repeats=3, warmup=1)
+    t1 = timeit(run_cg, repeats=3, warmup=1)
+    emit(
+        f"solvers/cg-block{k}/poisson{g}x{g}",
+        tk,
+        f"multi_rhs_speedup_vs_{k}_solves={k * t1 / tk:.2f}x",
+    )
+
+    # Chebyshev smoothing: fixed 40-iteration pass, the multigrid kernel
+    lam_max = 8.0  # Gershgorin bound of the 5-point stencil
+    def run_cheb(b=b):
+        r = chebyshev(op, b, lam_min=lam_max / 30, lam_max=lam_max, tol=0.0, maxiter=40)
+        r.x.block_until_ready()
+        return r
+
+    _solver_row(f"chebyshev40/poisson{g}x{g}", run_cheb, lambda r: r.iterations)
+
+    # --- BiCGSTAB on a diagonally-shifted circuit matrix (nonsymmetric) ---
+    from repro.core.matrices import circuit
+
+    C = circuit(12_000 if full else 6_000, seed=1)
+    sigma = 1.5 * float(np.abs(C.data).max())
+    N = shifted(C, sigma)
+    ntiles = build_tiles(N, cfg)
+    nop = aslinearoperator(ntiles, strategy="reference")
+    bn = rng.standard_normal(N.n_rows).astype(np.float32)
+
+    def run_bicg(bn=bn):
+        r = bicgstab(nop, bn, tol=1e-6, maxiter=500)
+        r.x.block_until_ready()
+        return r
+
+    _solver_row("bicgstab/circuit-shifted", run_bicg, lambda r: r.iterations)
+
+    # --- PageRank on an R-MAT graph: single vs multi-personalization ---
+    Gr = rmat(1 << (15 if full else 13), 300_000 if full else 80_000, seed=4)
+    M, dang = transition_matrix(Gr)
+    mtiles = build_tiles(M, cfg)
+    mop = aslinearoperator(mtiles, strategy="reference")
+    n = Gr.n_rows
+    P = (rng.random((n, k)) + 0.01).astype(np.float32)
+
+    def run_pr():
+        r = pagerank(mop, dangling=dang, tol=1e-8, maxiter=200)
+        r.x.block_until_ready()
+        return r
+
+    _solver_row("pagerank/rmat", run_pr, lambda r: r.iterations)
+
+    def run_pr_multi(P=P):
+        r = pagerank(mop, personalization=P, dangling=dang, tol=1e-8, maxiter=200)
+        r.x.block_until_ready()
+        return r
+
+    tm = timeit(run_pr_multi, repeats=3, warmup=1)
+    ts = timeit(run_pr, repeats=3, warmup=1)
+    emit(
+        f"solvers/pagerank-multi{k}/rmat",
+        tm,
+        f"multi_rhs_speedup_vs_{k}_runs={k * ts / tm:.2f}x (SpMM kernel, "
+        f"one tile-stream pass per iteration for all {k} rankings)",
+    )
+
+
+if __name__ == "__main__":
+    main()

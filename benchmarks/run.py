@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,traffic,schedule,roofline")
+    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,traffic,schedule,roofline,solvers")
     args = ap.parse_args()
 
     from . import (
@@ -22,6 +22,7 @@ def main() -> None:
         bench_preprocess,
         bench_roofline,
         bench_schedule,
+        bench_solvers,
         bench_spmv,
         bench_stddev,
         bench_traffic,
@@ -35,6 +36,7 @@ def main() -> None:
         "traffic": bench_traffic.main,      # Table II
         "schedule": bench_schedule.main,    # §III-C
         "roofline": bench_roofline.main,    # EXPERIMENTS §Roofline
+        "solvers": bench_solvers.main,      # workload level (beyond-paper)
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

@@ -1,0 +1,60 @@
+"""Quickstart: PageRank on an R-MAT graph through the HBP pipeline.
+
+    PYTHONPATH=src python examples/pagerank_rmat.py
+
+The workload the paper motivates: an iterative algorithm whose inner loop
+is one sparse product, run entirely on the HBP tile format.  Builds a
+power-law (kron_g500-family) graph, converts the column-stochastic
+transition matrix to HBP tiles, and ranks with the jit-compiled power
+iteration — once with the uniform vector (SpMV per step) and once with
+four personalization vectors in a single run (the multi-RHS SpMM kernel:
+one tile-stream pass per iteration for all four rankings).
+"""
+import numpy as np
+
+from repro.core import PartitionConfig, build_tiles
+from repro.core.matrices import rmat
+from repro.solvers import aslinearoperator, pagerank, transition_matrix
+
+
+def main() -> None:
+    print("== PageRank on HBP quickstart ==")
+    G = rmat(1 << 13, 80_000, seed=4, symmetric=False)
+    print(f"graph: {G.n_rows:,} nodes, {G.nnz:,} edges")
+
+    # host-side preprocessing: normalize + transpose, then the HBP build
+    M, dangling = transition_matrix(G)
+    tiles = build_tiles(M, PartitionConfig())
+    print(f"tiles: {tiles.n_tiles}, utilization={tiles.nnz_utilization():.2f}, "
+          f"dangling nodes: {int(dangling.sum())}")
+    # jnp oracle of the Pallas kernel on CPU; on TPU drop strategy for the
+    # fused Pallas path
+    op = aslinearoperator(tiles, strategy="reference")
+
+    # 1. classic PageRank (one SpMV launch per iteration)
+    res = pagerank(op, damping=0.85, dangling=dangling, tol=1e-10, maxiter=200)
+    p = np.asarray(res.x)
+    print(f"converged={bool(res.converged)} in {int(res.iterations)} iterations, "
+          f"sum={p.sum():.6f}")
+    print("top-5 nodes:", np.argsort(p)[::-1][:5].tolist())
+
+    # 2. four personalized rankings in ONE run (multi-RHS SpMM per step)
+    rng = np.random.default_rng(0)
+    P = (rng.random((G.n_rows, 4)) + 0.01).astype(np.float32)
+    multi = pagerank(op, damping=0.85, personalization=P, dangling=dangling,
+                     tol=1e-10, maxiter=200)
+    pm = np.asarray(multi.x)
+    print(f"personalized block: shape={pm.shape}, "
+          f"column sums={np.round(pm.sum(axis=0), 6).tolist()}")
+
+    # cross-check column 0 against an independent single-vector run
+    single = pagerank(op, damping=0.85, personalization=P[:, 0],
+                      dangling=dangling, tol=1e-10, maxiter=200)
+    err = np.abs(pm[:, 0] - np.asarray(single.x)).max()
+    print(f"SpMM column vs independent SpMV run: max abs diff = {err:.2e}")
+    assert err < 1e-6
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

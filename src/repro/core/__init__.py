@@ -7,7 +7,7 @@ from .hbp import HBPMatrix, build_hbp, hbp_spmv_reference
 from .partition import Partition2D, PartitionConfig
 from .reorder import REORDER_METHODS, group_stddev, padding_waste
 from .schedule import Schedule, contiguous_schedule, lpt_schedule, mixed_schedule
-from .spmv import csr_spmv_jnp, spmv
+from .spmv import csr_spmm_jnp, csr_spmv_jnp, spmm, spmv
 from .tile import HBPTiles, build_tiles, tuned_partition_config
 
 __all__ = [
@@ -32,7 +32,9 @@ __all__ = [
     "lpt_schedule",
     "mixed_schedule",
     "csr_spmv_jnp",
+    "csr_spmm_jnp",
     "spmv",
+    "spmm",
     "HBPTiles",
     "build_tiles",
     "tuned_partition_config",

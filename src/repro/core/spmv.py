@@ -23,11 +23,18 @@ from .tile import HBPTiles, build_tiles
 
 __all__ = [
     "spmv",
+    "spmm",
     "csr_spmv_jnp",
+    "csr_spmm_jnp",
     "build_hbp",
     "build_tiles",
     "PartitionConfig",
 ]
+
+
+def _csr_row_ids(indptr: jnp.ndarray, nnz: int) -> jnp.ndarray:
+    """Row id of every nonzero, reconstructed from ``indptr`` on device."""
+    return jnp.cumsum(jnp.zeros(nnz, jnp.int32).at[indptr[1:-1]].add(1))
 
 
 def csr_spmv_jnp(
@@ -35,11 +42,21 @@ def csr_spmv_jnp(
 ) -> jnp.ndarray:
     """Device CSR SpMV (Algorithm 1) via segment-sum — the CSR baseline of
     Figs. 8/10 expressed in XLA-native ops."""
-    rows = jnp.cumsum(jnp.zeros(data.shape[0], jnp.int32).at[indptr[1:-1]].add(1))
-    prod = data * x[indices]
     import jax
 
-    return jax.ops.segment_sum(prod, rows, num_segments=n_rows)
+    prod = data * x[indices]
+    return jax.ops.segment_sum(prod, _csr_row_ids(indptr, data.shape[0]), num_segments=n_rows)
+
+
+def csr_spmm_jnp(
+    indptr: jnp.ndarray, indices: jnp.ndarray, data: jnp.ndarray, x: jnp.ndarray, n_rows: int
+) -> jnp.ndarray:
+    """Device CSR multi-RHS SpMM (``x: [n_cols, k]``) via segment-sum —
+    the CSR baseline of the SpMM kernel."""
+    import jax
+
+    prod = data[:, None] * x[indices]  # [nnz, k]
+    return jax.ops.segment_sum(prod, _csr_row_ids(indptr, data.shape[0]), num_segments=n_rows)
 
 
 def spmv(
@@ -49,7 +66,13 @@ def spmv(
     backend: Literal["auto", "pallas", "jnp", "reference"] = "auto",
     interpret: bool | None = None,
 ):
-    """Sparse matrix–vector product ``A @ x``."""
+    """Sparse matrix–vector product ``A @ x``.
+
+    A 2-D ``x`` (an ``[n, k]`` block of right-hand sides) routes to
+    :func:`spmm`, which serves all ``k`` columns from one kernel launch.
+    """
+    if getattr(x, "ndim", 1) == 2:
+        return spmm(A, x, backend=backend, interpret=interpret)
     if isinstance(A, CSRMatrix):
         if backend in ("auto", "reference"):
             return A.matvec(np.asarray(x))
@@ -65,5 +88,40 @@ def spmv(
             return ops.hbp_spmv(A, jnp.asarray(x, jnp.float32), interpret=interpret)
         if backend == "jnp":
             return ops.hbp_spmv(A, jnp.asarray(x, jnp.float32), strategy="reference")
+        raise ValueError(f"unsupported backend {backend!r} for HBPTiles")
+    raise TypeError(f"unsupported matrix type {type(A)!r}")
+
+
+def spmm(
+    A,
+    x,
+    *,
+    backend: Literal["auto", "pallas", "jnp", "reference"] = "auto",
+    interpret: bool | None = None,
+):
+    """Sparse matrix–matrix product ``Y = A @ X`` with ``X: [n_cols, k]``.
+
+    Dispatches like :func:`spmv`; on :class:`HBPTiles` it launches the
+    multi-RHS SpMM kernel (one tile-stream pass for all ``k`` columns).
+    """
+    if isinstance(A, CSRMatrix):
+        if backend in ("auto", "reference"):
+            xs = np.asarray(x)
+            return np.stack([A.matvec(xs[:, j]) for j in range(xs.shape[1])], axis=1)
+        return csr_spmm_jnp(
+            jnp.asarray(A.indptr), jnp.asarray(A.indices), jnp.asarray(A.data), jnp.asarray(x), A.n_rows
+        )
+    if isinstance(A, HBPMatrix):
+        xs = np.asarray(x)
+        return np.stack(
+            [hbp_spmv_reference(A, xs[:, j]) for j in range(xs.shape[1])], axis=1
+        )
+    if isinstance(A, HBPTiles):
+        from repro.kernels import ops
+
+        if backend in ("auto", "pallas"):
+            return ops.hbp_spmm(A, jnp.asarray(x, jnp.float32), interpret=interpret)
+        if backend == "jnp":
+            return ops.hbp_spmm(A, jnp.asarray(x, jnp.float32), strategy="reference")
         raise ValueError(f"unsupported backend {backend!r} for HBPTiles")
     raise TypeError(f"unsupported matrix type {type(A)!r}")

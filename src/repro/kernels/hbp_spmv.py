@@ -27,6 +27,13 @@ vector-segment reuse.
 The gather ``jnp.take(seg, cols)`` maps to Mosaic's dynamic-gather on the
 lane dimension (int32 indices into VMEM).  Kernels are validated against
 ``ref.py`` in ``interpret=True`` mode on CPU; TPU is the deployment target.
+
+Both strategies also come in **multi-RHS SpMM** form
+(:func:`hbp_spmm_fused` / :func:`hbp_spmm_partials`): ``X: [n, k]`` is
+staged as ``[n_col_blocks, col_block, k]`` segments with the RHS columns in
+the lane dimension, so one launch reads the tile stream once for all ``k``
+right-hand sides — the workload shape of blocked Krylov solvers and
+multi-personalization PageRank (see ``repro.solvers``).
 """
 from __future__ import annotations
 
@@ -37,7 +44,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["hbp_spmv_fused", "hbp_spmv_partials"]
+__all__ = [
+    "hbp_spmv_fused",
+    "hbp_spmv_partials",
+    "hbp_spmm_fused",
+    "hbp_spmm_partials",
+]
 
 
 def _fused_kernel(rowgroup_ref, colblock_ref, first_ref, data_ref, cols_ref, x_ref, y_ref):
@@ -87,6 +99,61 @@ def hbp_spmv_fused(
     )(rowgroup, colblock, first, data, cols, x_blocked)
 
 
+def _fused_spmm_kernel(rowgroup_ref, colblock_ref, first_ref, data_ref, cols_ref, x_ref, y_ref):
+    """Multi-RHS variant: y[rowgroup[t]] += einsum('gl,glk->gk', data, x_seg[cols])."""
+    t = pl.program_id(0)
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    seg = x_ref[0]  # [col_block, k]: RHS columns live in the lane dimension
+    gathered = jnp.take(seg, cols_ref[0], axis=0)  # [group, lane, k]
+    y_ref[0] += jnp.sum(data_ref[0][..., None] * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rowgroups", "interpret"))
+def hbp_spmm_fused(
+    rowgroup: jax.Array,  # i32[T]
+    colblock: jax.Array,  # i32[T]
+    first: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block, k]
+    *,
+    n_rowgroups: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused-combine HBP SpMM (multi-RHS): ``Y = A @ X`` with ``X: [n, k]``.
+
+    One kernel launch serves all ``k`` right-hand sides: the tile stream
+    (data + cols, the dominant HBM traffic) is read ONCE instead of ``k``
+    times, so blocked iterative solvers and multi-personalization PageRank
+    amortize the format bytes across RHS columns.  ``k`` sits in the lane
+    dimension (the x segment is ``[col_block, k]``), keeping the gather on
+    the sublane axis exactly as in the SpMV kernel.  Returns y in hashed
+    row order, shape [n_rowgroups, group, k].
+    """
+    T, group, lane = data.shape
+    col_block, k = x_blocked.shape[1], x_blocked.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, col_block, k), lambda t, rg, cb, fs: (cb[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, k), lambda t, rg, cb, fs: (rg[t], 0, 0)),
+    )
+    return pl.pallas_call(
+        _fused_spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rowgroups, group, k), jnp.float32),
+        interpret=interpret,
+    )(rowgroup, colblock, first, data, cols, x_blocked)
+
+
 def _partials_kernel(colblock_ref, data_ref, cols_ref, x_ref, y_ref):
     """One grid step = one tile: emit the tile's own partial result."""
     seg = x_ref[0]
@@ -121,5 +188,43 @@ def hbp_spmv_partials(
         _partials_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((T, group), jnp.float32),
+        interpret=interpret,
+    )(colblock, data, cols, x_blocked)
+
+
+def _partials_spmm_kernel(colblock_ref, data_ref, cols_ref, x_ref, y_ref):
+    """Multi-RHS partials: one tile emits its [group, k] partial block."""
+    seg = x_ref[0]  # [col_block, k]
+    gathered = jnp.take(seg, cols_ref[0], axis=0)  # [group, lane, k]
+    y_ref[0] = jnp.sum(data_ref[0][..., None] * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hbp_spmm_partials(
+    colblock: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block, k]
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """SpMM part only (two-phase multi-RHS): per-tile partial blocks
+    [T, group, k]; the combine part reduces them by row group."""
+    T, group, lane = data.shape
+    col_block, k = x_blocked.shape[1], x_blocked.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
+            pl.BlockSpec((1, col_block, k), lambda t, cb: (cb[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, k), lambda t, cb: (t, 0, 0)),
+    )
+    return pl.pallas_call(
+        _partials_spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, group, k), jnp.float32),
         interpret=interpret,
     )(colblock, data, cols, x_blocked)

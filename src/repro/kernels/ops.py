@@ -19,7 +19,14 @@ from repro.core.tile import HBPTiles
 from . import hbp_spmv as _k
 from . import ref as _ref
 
-__all__ = ["DeviceTiles", "device_tiles", "hbp_spmv", "blocked_vector"]
+__all__ = [
+    "DeviceTiles",
+    "device_tiles",
+    "hbp_spmv",
+    "hbp_spmm",
+    "blocked_vector",
+    "blocked_matrix",
+]
 
 
 class DeviceTiles(NamedTuple):
@@ -58,6 +65,15 @@ def blocked_vector(x: jax.Array, col_block: int) -> jax.Array:
     n_blocks = -(-n // col_block)
     pad = n_blocks * col_block - n
     return jnp.pad(x, (0, pad)).reshape(n_blocks, col_block)
+
+
+def blocked_matrix(x: jax.Array, col_block: int) -> jax.Array:
+    """Pad an [n, k] RHS block to a multiple of ``col_block`` rows and
+    reshape into [n_blocks, col_block, k] segments (k in the lane dim)."""
+    n, k = x.shape
+    n_blocks = -(-n // col_block)
+    pad = n_blocks * col_block - n
+    return jnp.pad(x, ((0, pad), (0, 0))).reshape(n_blocks, col_block, k)
 
 
 def _default_interpret() -> bool:
@@ -102,6 +118,56 @@ def _hbp_spmv_device(
     return _ref.unpermute(y_hashed, dt.perm, n_rows)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("n_rowgroups", "n_rows", "strategy", "interpret")
+)
+def _hbp_spmm_device(
+    dt: DeviceTiles,
+    x_blocked: jax.Array,  # f32[n_blocks, col_block, k]
+    *,
+    n_rowgroups: int,
+    n_rows: int,
+    strategy: str,
+    interpret: bool,
+) -> jax.Array:
+    k = x_blocked.shape[-1]
+    if dt.data.shape[0] == 0:  # empty matrix: no tiles, Y == 0
+        return jnp.zeros((n_rows, k), jnp.float32)
+    if strategy == "fused":
+        y_hashed = _k.hbp_spmm_fused(
+            dt.rowgroup, dt.colblock, dt.first, dt.data, dt.cols, x_blocked,
+            n_rowgroups=n_rowgroups, interpret=interpret,
+        )
+        y_hashed = jnp.where(dt.visited[..., None] > 0, y_hashed, 0.0)
+    elif strategy == "partials":
+        contrib = _k.hbp_spmm_partials(
+            dt.colblock, dt.data, dt.cols, x_blocked, interpret=interpret
+        )
+        y_hashed = jax.ops.segment_sum(contrib, dt.rowgroup, num_segments=n_rowgroups)
+    elif strategy == "reference":
+        y_hashed = _ref.hbp_spmm_hashed_ref(
+            dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
+            n_rowgroups=n_rowgroups,
+        )
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return _ref.unpermute(y_hashed, dt.perm, n_rows)
+
+
+def _resolve(tiles, x, n_rowgroups, n_rows, col_block):
+    if isinstance(tiles, HBPTiles):
+        if x.shape[0] != tiles.shape[1]:
+            # jnp gathers clamp out-of-range block ids, so a wrong-sized x
+            # would silently return garbage instead of erroring
+            raise ValueError(
+                f"x has {x.shape[0]} rows but the matrix has {tiles.shape[1]} columns"
+            )
+        return device_tiles(tiles), (tiles.n_rowgroups, tiles.shape[0], tiles.cfg.col_block)
+    if None in (n_rowgroups, n_rows, col_block):
+        raise ValueError("DeviceTiles input requires explicit metadata")
+    return tiles, (n_rowgroups, n_rows, col_block)
+
+
 def hbp_spmv(
     tiles: HBPTiles | DeviceTiles,
     x: jax.Array,
@@ -113,19 +179,41 @@ def hbp_spmv(
     col_block: int | None = None,
 ) -> jax.Array:
     """HBP SpMV: ``y = A @ x`` with A in HBP tile format."""
-    if isinstance(tiles, HBPTiles):
-        meta = (tiles.n_rowgroups, tiles.shape[0], tiles.cfg.col_block)
-        dt = device_tiles(tiles)
-    else:
-        if None in (n_rowgroups, n_rows, col_block):
-            raise ValueError("DeviceTiles input requires explicit metadata")
-        meta = (n_rowgroups, n_rows, col_block)
-        dt = tiles
-    n_rowgroups, n_rows, col_block = meta
+    x = jnp.asarray(x, jnp.float32)
+    dt, (n_rowgroups, n_rows, col_block) = _resolve(tiles, x, n_rowgroups, n_rows, col_block)
     if interpret is None:
         interpret = _default_interpret()
-    x_blocked = blocked_vector(jnp.asarray(x, jnp.float32), col_block)
+    x_blocked = blocked_vector(x, col_block)
     return _hbp_spmv_device(
+        dt,
+        x_blocked,
+        n_rowgroups=n_rowgroups,
+        n_rows=n_rows,
+        strategy=strategy,
+        interpret=interpret,
+    )
+
+
+def hbp_spmm(
+    tiles: HBPTiles | DeviceTiles,
+    x: jax.Array,  # [n_cols, k]
+    *,
+    strategy: Literal["fused", "partials", "reference"] = "fused",
+    interpret: bool | None = None,
+    n_rowgroups: int | None = None,
+    n_rows: int | None = None,
+    col_block: int | None = None,
+) -> jax.Array:
+    """HBP multi-RHS SpMM: ``Y = A @ X`` with A in HBP tile format.
+
+    One kernel launch serves all ``k`` columns of X — the tile stream is
+    read once instead of ``k`` times (the SpMV-per-column fallback)."""
+    x = jnp.asarray(x, jnp.float32)
+    dt, (n_rowgroups, n_rows, col_block) = _resolve(tiles, x, n_rowgroups, n_rows, col_block)
+    if interpret is None:
+        interpret = _default_interpret()
+    x_blocked = blocked_matrix(x, col_block)
+    return _hbp_spmm_device(
         dt,
         x_blocked,
         n_rowgroups=n_rowgroups,

@@ -11,7 +11,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["tile_contrib_ref", "hbp_spmv_hashed_ref", "unpermute"]
+__all__ = [
+    "tile_contrib_ref",
+    "hbp_spmv_hashed_ref",
+    "tile_contrib_spmm_ref",
+    "hbp_spmm_hashed_ref",
+    "unpermute",
+]
 
 
 def tile_contrib_ref(
@@ -44,12 +50,41 @@ def hbp_spmv_hashed_ref(
     return jax.ops.segment_sum(contrib, rowgroup, num_segments=n_rowgroups)
 
 
+def tile_contrib_spmm_ref(
+    colblock: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block, k]
+) -> jax.Array:
+    """Per-tile partial blocks [T, group, k] — oracle of the SpMM part."""
+    segs = x_blocked[colblock]  # [T, col_block, k]
+    gathered = jax.vmap(lambda s, c: s[c])(segs, cols)  # [T, group, lane, k]
+    return jnp.einsum("tgl,tglk->tgk", data, gathered)
+
+
+def hbp_spmm_hashed_ref(
+    rowgroup: jax.Array,
+    colblock: jax.Array,
+    data: jax.Array,
+    cols: jax.Array,
+    x_blocked: jax.Array,
+    *,
+    n_rowgroups: int,
+) -> jax.Array:
+    """Full multi-RHS SpMM + combine oracle, output in hashed row order
+    [n_rowgroups, group, k]."""
+    contrib = tile_contrib_spmm_ref(colblock, data, cols, x_blocked)
+    return jax.ops.segment_sum(contrib, rowgroup, num_segments=n_rowgroups)
+
+
 def unpermute(y_hashed: jax.Array, perm: jax.Array, n_rows: int) -> jax.Array:
     """Undo the hash reordering: slot s computed original row ``perm[s]``.
 
-    ``y_hashed`` is [n_rowgroups, group]; ``perm`` maps slots (flattened
-    hashed order) to original row ids over the padded row space.
+    ``y_hashed`` is [n_rowgroups, group] (SpMV) or [n_rowgroups, group, k]
+    (SpMM); ``perm`` maps slots (flattened hashed order) to original row
+    ids over the padded row space.  Trailing RHS dims ride along.
     """
-    flat = y_hashed.reshape(-1)
-    padded = jnp.zeros(perm.shape[0], dtype=y_hashed.dtype).at[perm].set(flat)
+    flat = y_hashed.reshape((-1,) + y_hashed.shape[2:])
+    padded = jnp.zeros((perm.shape[0],) + flat.shape[1:], dtype=y_hashed.dtype)
+    padded = padded.at[perm].set(flat)
     return padded[:n_rows]

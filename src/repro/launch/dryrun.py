@@ -212,6 +212,8 @@ def unrolled_cfg(cfg: ModelConfig, k: int) -> ModelConfig:
 
 def cost_dict(compiled) -> dict:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 wraps it per-computation
+        ca = ca[0] if ca else {}
     return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
 
 

@@ -76,7 +76,7 @@ def stack_defs(tree, n: int, axis_name: str = "layers"):
 def init_params(tree, key: jax.Array, dtype=jnp.float32):
     """Materialise a def tree into arrays.  Deterministic: every leaf's key
     is folded from its path, independent of dict ordering."""
-    leaves_with_paths, treedef = jax.tree.flatten_with_path(tree, is_leaf=_is_def)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_def)
 
     def make(path, d: ParamDef):
         if d.init == "zeros":

@@ -1,0 +1,58 @@
+"""Shared solver plumbing: results, histories, safe arithmetic.
+
+Every solver loop is a ``jax.lax.while_loop`` whose carry includes a
+fixed-length residual history (``maxiter + 1`` slots, NaN beyond the last
+iteration actually run), so the whole iteration — SpMV/SpMM launches,
+vector updates, convergence test — stays on device and jit-compiles.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SolveResult", "EigResult", "l2norm", "safe_div", "history_init"]
+
+
+class SolveResult(NamedTuple):
+    """Outcome of an iterative linear solve.
+
+    ``x`` has the shape of ``b`` ([n] or [n, k]); ``residual`` and the
+    per-iteration ``history`` rows are scalars for a single RHS and
+    ``[k]`` vectors for blocked RHS.
+    """
+
+    x: jax.Array
+    converged: jax.Array  # bool[] — all RHS columns under tolerance
+    iterations: jax.Array  # i32[]
+    residual: jax.Array  # final ||b - A x|| (2-norm), per RHS column
+    history: jax.Array  # f32[maxiter + 1, ...] residual norms, NaN-padded
+
+
+class EigResult(NamedTuple):
+    """Outcome of an eigenvalue iteration (power method)."""
+
+    eigenvalue: jax.Array  # f32[] Rayleigh quotient at exit
+    eigenvector: jax.Array  # f32[n], unit norm
+    converged: jax.Array  # bool[]
+    iterations: jax.Array  # i32[]
+    residual: jax.Array  # ||A v - lambda v|| at exit
+    history: jax.Array  # f32[maxiter + 1] eigenvalue estimates, NaN-padded
+
+
+def l2norm(v: jax.Array) -> jax.Array:
+    """Column-wise 2-norm: scalar for [n], [k] for [n, k]."""
+    return jnp.sqrt(jnp.sum(v * v, axis=0))
+
+
+def safe_div(num: jax.Array, den: jax.Array) -> jax.Array:
+    """num / den with 0 where den == 0 (Krylov breakdown guard: a zero
+    denominator only occurs once the residual is exactly zero)."""
+    return jnp.where(den != 0, num / jnp.where(den != 0, den, 1.0), 0.0)
+
+
+def history_init(maxiter: int, first_row: jax.Array) -> jax.Array:
+    """[maxiter + 1, ...] NaN history with slot 0 filled."""
+    hist = jnp.full((maxiter + 1,) + first_row.shape, jnp.nan, jnp.float32)
+    return hist.at[0].set(first_row)

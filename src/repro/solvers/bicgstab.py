@@ -1,0 +1,79 @@
+"""BiCGSTAB (van der Vorst) — the nonsymmetric workhorse.
+
+The paper's matrix families (circuit simulation, semiconductor FEM) are
+nonsymmetric, so CG does not apply to them directly; BiCGSTAB is the
+standard Krylov method production circuit solvers run on exactly these
+matrices.  Two operator applications per iteration; like :func:`cg` it is
+vectorised over an ``[n, k]`` RHS block (per-column scalars, shared SpMM
+launches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import SolveResult, history_init, l2norm, safe_div
+from .operator import aslinearoperator
+
+__all__ = ["bicgstab"]
+
+
+def bicgstab(
+    A,
+    b: jax.Array,
+    *,
+    x0: jax.Array | None = None,
+    tol: float = 1e-6,
+    maxiter: int = 400,
+) -> SolveResult:
+    """Solve ``A x = b`` for general (nonsymmetric) ``A``.
+
+    On Krylov breakdown (``rho`` or ``omega`` hitting exactly zero —
+    residual already at machine floor) the guarded divisions freeze the
+    iterate instead of producing NaNs, and the loop exits on the residual
+    test or ``maxiter``.
+    """
+    op = aslinearoperator(A)
+    b = jnp.asarray(b, jnp.float32)
+    x = jnp.zeros_like(b) if x0 is None else jnp.asarray(x0, jnp.float32)
+    bnorm = jnp.maximum(l2norm(b), jnp.finfo(jnp.float32).tiny)
+
+    r = b - op(x)
+    rhat = r  # shadow residual, fixed
+    ones = jnp.ones(r.shape[1:], jnp.float32)
+    rho = ones
+    alpha = ones
+    omega = ones
+    v = jnp.zeros_like(r)
+    p = jnp.zeros_like(r)
+    hist = history_init(maxiter, l2norm(r))
+
+    def cond(state):
+        k, _, r, *_ = state
+        return (k < maxiter) & jnp.any(l2norm(r) > tol * bnorm)
+
+    def body(state):
+        k, x, r, p, v, rho, alpha, omega, hist = state
+        rho_new = jnp.sum(rhat * r, axis=0)
+        beta = safe_div(rho_new * alpha, rho * omega)
+        p = r + beta * (p - omega * v)
+        v = op(p)
+        alpha = safe_div(rho_new, jnp.sum(rhat * v, axis=0))
+        s = r - alpha * v
+        t = op(s)
+        omega = safe_div(jnp.sum(t * s, axis=0), jnp.sum(t * t, axis=0))
+        x = x + alpha * p + omega * s
+        r = s - omega * t
+        hist = hist.at[k + 1].set(l2norm(r))
+        return k + 1, x, r, p, v, rho_new, alpha, omega, hist
+
+    state = (0, x, r, p, v, rho, alpha, omega, hist)
+    k, x, r, p, v, rho, alpha, omega, hist = jax.lax.while_loop(cond, body, state)
+    res = l2norm(r)
+    return SolveResult(
+        x=x,
+        converged=jnp.all(res <= tol * bnorm),
+        iterations=k,
+        residual=res,
+        history=hist,
+    )

@@ -1,0 +1,90 @@
+"""Chebyshev iteration / polynomial smoothing on the HBP operator.
+
+Given spectrum bounds ``0 < lam_min <= lam(A) <= lam_max`` for SPD ``A``,
+Chebyshev iteration reaches CG-like convergence WITHOUT inner products —
+every iteration is exactly one operator application plus AXPYs.  That
+makes it the multigrid smoother of choice and, for this library, the
+purest "SpMV is the whole workload" solver: no reductions compete with
+the kernel launch in the profile.  Vectorised over ``[n, k]`` RHS blocks
+like :func:`~repro.solvers.cg.cg` (the scalars are spectral, shared by
+every column).
+
+:func:`estimate_spectrum` bootstraps the bounds with a short power
+iteration (``lam_max`` slightly inflated for safety, ``lam_min`` as a
+fixed fraction — the standard smoothing convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import SolveResult, history_init, l2norm
+from .operator import aslinearoperator
+
+__all__ = ["chebyshev", "estimate_spectrum"]
+
+
+def estimate_spectrum(
+    A, *, maxiter: int = 50, lower_frac: float = 0.1, safety: float = 1.05
+) -> tuple[float, float]:
+    """(lam_min, lam_max) bounds for :func:`chebyshev` via power iteration."""
+    from .power import power_iteration
+
+    res = power_iteration(A, maxiter=maxiter, tol=1e-4)
+    lam_max = float(res.eigenvalue) * safety
+    return lower_frac * lam_max, lam_max
+
+
+def chebyshev(
+    A,
+    b: jax.Array,
+    *,
+    lam_min: float,
+    lam_max: float,
+    x0: jax.Array | None = None,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+) -> SolveResult:
+    """Solve / smooth ``A x = b`` with Chebyshev acceleration.
+
+    With ``tol=0`` it runs exactly ``maxiter`` iterations — the fixed
+    polynomial degree of a multigrid smoothing pass.
+    """
+    if not 0 < lam_min < lam_max:
+        raise ValueError(f"need 0 < lam_min < lam_max, got [{lam_min}, {lam_max}]")
+    op = aslinearoperator(A)
+    b = jnp.asarray(b, jnp.float32)
+    x = jnp.zeros_like(b) if x0 is None else jnp.asarray(x0, jnp.float32)
+    bnorm = jnp.maximum(l2norm(b), jnp.finfo(jnp.float32).tiny)
+
+    theta = 0.5 * (lam_max + lam_min)  # spectrum centre
+    delta = 0.5 * (lam_max - lam_min)  # spectrum half-width
+    sigma = theta / delta
+
+    r = b - op(x)
+    d = r / theta
+    hist = history_init(maxiter, l2norm(r))
+
+    def cond(state):
+        k, _, r, _, _, _ = state
+        return (k < maxiter) & jnp.any(l2norm(r) > tol * bnorm)
+
+    def body(state):
+        k, x, r, d, rho, hist = state
+        x = x + d
+        r = r - op(d)
+        rho_new = 1.0 / (2.0 * sigma - rho)
+        d = rho_new * rho * d + (2.0 * rho_new / delta) * r
+        hist = hist.at[k + 1].set(l2norm(r))
+        return k + 1, x, r, d, rho_new, hist
+
+    state = (0, x, r, d, 1.0 / sigma, hist)
+    k, x, r, d, rho, hist = jax.lax.while_loop(cond, body, state)
+    res = l2norm(r)
+    return SolveResult(
+        x=x,
+        converged=jnp.all(res <= tol * bnorm),
+        iterations=k,
+        residual=res,
+        history=hist,
+    )

@@ -1,5 +1,8 @@
 """CSR/COO containers and the 2D partition (paper §III-A)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CSRMatrix, csr_from_dense, Partition2D, PartitionConfig

@@ -1,6 +1,7 @@
 """Nonlinear hash (paper §III-B): unit + property tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hash import (

@@ -1,6 +1,7 @@
 """Faithful HBP format (Fig. 2, Algorithms 2/3) against the dense oracle."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PartitionConfig, build_hbp, csr_from_dense, hbp_spmv_reference

@@ -6,6 +6,7 @@ dense oracle in interpret mode.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

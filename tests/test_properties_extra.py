@@ -1,6 +1,7 @@
 """Additional system-invariant property tests (hypothesis)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

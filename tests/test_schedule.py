@@ -1,6 +1,7 @@
 """Mixed execution allocation (paper §III-C) — static competitive replay."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import contiguous_schedule, lpt_schedule, mixed_schedule

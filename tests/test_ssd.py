@@ -1,6 +1,7 @@
 """Mamba-2 SSD chunked scan vs the naive recurrence oracle."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
