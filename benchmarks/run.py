@@ -14,11 +14,12 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,traffic,schedule,roofline,solvers")
+    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,memtraffic,schedule,roofline,solvers,traffic")
     args = ap.parse_args()
 
     from . import (
         bench_combine,
+        bench_memtraffic,
         bench_preprocess,
         bench_roofline,
         bench_schedule,
@@ -33,10 +34,11 @@ def main() -> None:
         "preprocess": bench_preprocess.main,  # Fig. 7
         "spmv": bench_spmv.main,            # Figs. 8/10
         "combine": bench_combine.main,      # Fig. 9
-        "traffic": bench_traffic.main,      # Table II
+        "memtraffic": bench_memtraffic.main,  # Table II
         "schedule": bench_schedule.main,    # §III-C
         "roofline": bench_roofline.main,    # EXPERIMENTS §Roofline
         "solvers": bench_solvers.main,      # workload level (beyond-paper)
+        "traffic": bench_traffic.main,      # serving engine (beyond-paper)
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

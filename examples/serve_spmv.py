@@ -1,0 +1,71 @@
+"""Serving SpMV traffic end to end: registry -> micro-batcher -> kernel.
+
+    PYTHONPATH=src python examples/serve_spmv.py
+
+Admits two matrices into a MatrixRegistry (content-hashed, partition
+config autotuned with an on-disk cache under .hbp_autotune/), replays a
+burst of mixed requests through the micro-batching ServingEngine, checks
+every answer bitwise against a sequential per-request SpMV, and prints the
+engine's instrumentation — including how far the traffic has amortized the
+one-time HBP preprocessing cost.
+"""
+import numpy as np
+
+from repro.core import spmv
+from repro.core.matrices import banded_fem, circuit
+from repro.core.partition import enumerate_configs
+from repro.serving import MatrixRegistry, ServingEngine
+
+
+def main() -> None:
+    print("== HBP SpMV serving ==")
+    A = circuit(6_000, seed=0)
+    B = banded_fem(4_000, seed=3)
+    # a compact measured search keeps the demo's first run quick; the cache
+    # makes every later run (and CI re-run) skip it entirely
+    candidates = enumerate_configs(
+        A.shape, row_blocks=(256, 512), col_blocks=(2048, 4096), lanes=(16, 64)
+    )
+
+    for attempt in ("cold (or cached from a previous run)", "warm"):
+        registry = MatrixRegistry(cache_dir=".hbp_autotune", candidates=candidates)
+        plan_a = registry.admit(A, "circuit")
+        plan_b = registry.admit(B, "fem")
+        print(f"[{attempt}] admit circuit: cache_hit={plan_a.autotune_cache_hit} "
+              f"searched={plan_a.autotune_searched} cfg=({plan_a.cfg.row_block},"
+              f"{plan_a.cfg.col_block},{plan_a.cfg.group},{plan_a.cfg.lane}) "
+              f"preprocess={plan_a.preprocess_s:.2f}s")
+
+    engine = ServingEngine(registry, max_wait_s=0.002)
+    rng = np.random.default_rng(0)
+    requests = []
+    for i in range(40):  # mixed traffic, ~2:1 across the two matrices
+        key = "circuit" if i % 3 != 2 else "fem"
+        n = (A if key == "circuit" else B).n_cols
+        x = rng.standard_normal(n).astype(np.float32)
+        requests.append((key, x, engine.submit(key, x)))
+    engine.flush()
+
+    worst = 0.0
+    for key, x, ticket in requests:
+        plan = registry.get(key)
+        assert np.array_equal(ticket.result(), np.asarray(plan.matvec(x))), (
+            "batched result must be bitwise identical to the sequential call"
+        )
+        y_ref = spmv(A if key == "circuit" else B, x.astype(np.float64))
+        worst = max(worst, float(np.abs(ticket.result() - y_ref).max() / (np.abs(y_ref).max() + 1e-12)))
+    print(f"40 requests served; bitwise == sequential; max rel err vs CSR: {worst:.2e}")
+
+    for key, s in sorted(engine.stats().items()):
+        print(
+            f"stats[{key}]: requests={s['requests']} batches={s['batches']} "
+            f"mean_batch_k={s['mean_batch_k']:.1f} occupancy={s['occupancy']:.2f} "
+            f"pad_fraction={s['pad_fraction']:.2f} "
+            f"p50={1e3 * s['latency_p50_s']:.1f}ms p99={1e3 * s['latency_p99_s']:.1f}ms "
+            f"amortized_preprocess={1e3 * s['amortized_preprocess_s']:.1f}ms/req"
+        )
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,7 @@
 from .formats import COOMatrix, CSRMatrix, csr_from_coo, csr_from_dense
 from .hash import HashParams, hash_reorder, hash_slot, sample_params
 from .hbp import HBPMatrix, build_hbp, hbp_spmv_reference
-from .partition import Partition2D, PartitionConfig
+from .partition import Partition2D, PartitionConfig, enumerate_configs
 from .reorder import REORDER_METHODS, group_stddev, padding_waste
 from .schedule import Schedule, contiguous_schedule, lpt_schedule, mixed_schedule
 from .spmv import csr_spmm_jnp, csr_spmv_jnp, spmm, spmv
@@ -24,6 +24,7 @@ __all__ = [
     "hbp_spmv_reference",
     "Partition2D",
     "PartitionConfig",
+    "enumerate_configs",
     "REORDER_METHODS",
     "group_stddev",
     "padding_waste",

@@ -100,6 +100,20 @@ class CSRMatrix:
         rows = np.repeat(np.arange(self.n_rows), self.row_nnz())
         return COOMatrix(rows, self.indices.copy(), self.data.copy(), self.shape)
 
+    def diagonal(self) -> np.ndarray:
+        """Main diagonal as a dense ``[min(shape)]`` vector (absent = 0).
+
+        Host-resident by construction — this is what the Jacobi
+        preconditioner and the serving registry capture at tile-build time.
+        """
+        n = min(self.shape)
+        rows = np.repeat(np.arange(self.n_rows), self.row_nnz())
+        mask = (rows == self.indices) & (rows < n)
+        out = np.zeros(n, dtype=self.data.dtype)
+        # accumulate: duplicate entries sum, matching matvec's semantics
+        np.add.at(out, rows[mask], self.data[mask])
+        return out
+
     def matvec(self, x: np.ndarray) -> np.ndarray:
         """Reference CSR SpMV (Algorithm 1 of the paper), vectorised."""
         prod = self.data * x[self.indices]

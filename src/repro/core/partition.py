@@ -24,7 +24,13 @@ import numpy as np
 
 from .formats import CSRMatrix
 
-__all__ = ["PartitionConfig", "count_block_nnz", "block_entry_order", "Partition2D"]
+__all__ = [
+    "PartitionConfig",
+    "count_block_nnz",
+    "block_entry_order",
+    "Partition2D",
+    "enumerate_configs",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +48,52 @@ class PartitionConfig:
             -(-n_rows // self.row_block),
             -(-n_cols // self.col_block),
         )
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def enumerate_configs(
+    shape: Tuple[int, int],
+    *,
+    row_blocks: Tuple[int, ...] = (256, 512),
+    col_blocks: Tuple[int, ...] = (1024, 4096),
+    groups: Tuple[int, ...] = (8,),
+    lanes: Tuple[int, ...] = (8, 32, 128),
+) -> list:
+    """Candidate tile geometries for a measured autotune search.
+
+    This is the search-space hook the serving autotuner
+    (:mod:`repro.serving.autotune`) enumerates and times.  Candidates are
+    clipped to the matrix: a row/column block larger than the (power-of-two
+    padded) dimension only adds padding, so oversized values collapse onto
+    the clipped one and duplicates are dropped, keeping the measured search
+    proportional to the matrix, not to the nominal grid.  ``group`` must
+    divide ``row_block`` (tile rows per group sit in the sublane dimension);
+    invalid combinations are skipped.
+    """
+    n_rows, n_cols = shape
+    row_cap = max(_next_pow2(n_rows), min(groups))
+    col_cap = max(_next_pow2(n_cols), min(lanes))
+    seen = set()
+    out = []
+    for rb in row_blocks:
+        rb = min(rb, row_cap)
+        for cb in col_blocks:
+            cb = min(cb, col_cap)
+            for g in groups:
+                if rb % g:
+                    continue
+                for lane in lanes:
+                    key = (rb, cb, g, lane)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    out.append(
+                        PartitionConfig(row_block=rb, col_block=cb, group=g, lane=lane)
+                    )
+    return out
 
 
 def count_block_nnz(csr: CSRMatrix, cfg: PartitionConfig) -> np.ndarray:

@@ -70,9 +70,15 @@ def spmv(
 
     A 2-D ``x`` (an ``[n, k]`` block of right-hand sides) routes to
     :func:`spmm`, which serves all ``k`` columns from one kernel launch.
+    A ``[n, 1]`` column vector is a 2-D input: it takes the SpMM path and
+    comes back as ``[n, 1]``, never silently squeezed to ``[n]``.
     """
-    if getattr(x, "ndim", 1) == 2:
+    # np.ndim (not getattr) so nested-list inputs dispatch by their true
+    # rank instead of falling through to the 1-D path.
+    if np.ndim(x) == 2:
         return spmm(A, x, backend=backend, interpret=interpret)
+    if np.ndim(x) != 1:
+        raise ValueError(f"spmv expects a 1-D or 2-D x, got ndim={np.ndim(x)}")
     if isinstance(A, CSRMatrix):
         if backend in ("auto", "reference"):
             return A.matvec(np.asarray(x))
@@ -103,7 +109,13 @@ def spmm(
 
     Dispatches like :func:`spmv`; on :class:`HBPTiles` it launches the
     multi-RHS SpMM kernel (one tile-stream pass for all ``k`` columns).
+    ``k = 1`` is a valid block width: the result keeps its ``[n, 1]`` shape.
     """
+    if np.ndim(x) != 2:
+        raise ValueError(
+            f"spmm expects x of shape [n_cols, k], got ndim={np.ndim(x)}; "
+            "use spmv for 1-D right-hand sides"
+        )
     if isinstance(A, CSRMatrix):
         if backend in ("auto", "reference"):
             xs = np.asarray(x)

@@ -2,6 +2,24 @@
 # <name>.py holds the pl.pallas_call + BlockSpec kernels, ops.py the jitted
 # public wrappers, ref.py the pure-jnp oracles they are validated against.
 from . import ops, ref
-from .ops import DeviceTiles, device_tiles, hbp_spmm, hbp_spmv
+from .ops import (
+    K_BUCKETS,
+    DeviceTiles,
+    bucket_k,
+    device_tiles,
+    hbp_spmm,
+    hbp_spmm_bucketed,
+    hbp_spmv,
+)
 
-__all__ = ["ops", "ref", "DeviceTiles", "device_tiles", "hbp_spmv", "hbp_spmm"]
+__all__ = [
+    "ops",
+    "ref",
+    "DeviceTiles",
+    "device_tiles",
+    "hbp_spmv",
+    "hbp_spmm",
+    "hbp_spmm_bucketed",
+    "bucket_k",
+    "K_BUCKETS",
+]

@@ -24,9 +24,18 @@ __all__ = [
     "device_tiles",
     "hbp_spmv",
     "hbp_spmm",
+    "hbp_spmm_bucketed",
+    "bucket_k",
+    "K_BUCKETS",
     "blocked_vector",
     "blocked_matrix",
 ]
+
+# RHS-width buckets of the k-padded SpMM entry.  ``_hbp_spmm_device`` is
+# jitted with k baked into the trace, so an unconstrained request mix would
+# compile one kernel per distinct k; padding to the next bucket bounds the
+# compile count at len(K_BUCKETS) per matrix geometry.
+K_BUCKETS = (1, 2, 4, 8, 16)
 
 
 class DeviceTiles(NamedTuple):
@@ -113,6 +122,13 @@ def _hbp_spmv_device(
             dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
             n_rowgroups=n_rowgroups,
         )
+    elif strategy == "stable":
+        # the k=1 column of the batch-width-invariant SpMM, so a vector
+        # served alone gets the same bits as any batched launch of it
+        y_hashed = _ref.hbp_spmm_hashed_stable(
+            dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked[..., None],
+            n_rowgroups=n_rowgroups,
+        )[..., 0]
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
     return _ref.unpermute(y_hashed, dt.perm, n_rows)
@@ -149,6 +165,11 @@ def _hbp_spmm_device(
             dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
             n_rowgroups=n_rowgroups,
         )
+    elif strategy == "stable":
+        y_hashed = _ref.hbp_spmm_hashed_stable(
+            dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
+            n_rowgroups=n_rowgroups,
+        )
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
     return _ref.unpermute(y_hashed, dt.perm, n_rows)
@@ -172,7 +193,7 @@ def hbp_spmv(
     tiles: HBPTiles | DeviceTiles,
     x: jax.Array,
     *,
-    strategy: Literal["fused", "partials", "reference"] = "fused",
+    strategy: Literal["fused", "partials", "reference", "stable"] = "fused",
     interpret: bool | None = None,
     n_rowgroups: int | None = None,
     n_rows: int | None = None,
@@ -194,11 +215,48 @@ def hbp_spmv(
     )
 
 
+def bucket_k(k: int, buckets: tuple = K_BUCKETS) -> int:
+    """Smallest bucket width >= k (multiples of the top bucket beyond it)."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    for b in buckets:
+        if k <= b:
+            return int(b)
+    top = buckets[-1]
+    return -(-k // top) * top
+
+
+def hbp_spmm_bucketed(
+    tiles: HBPTiles | DeviceTiles,
+    x: jax.Array,  # [n_cols, k]
+    *,
+    buckets: tuple = K_BUCKETS,
+    **kwargs,
+) -> jax.Array:
+    """k-padded SpMM: pad the RHS block to the next bucket width, launch
+    :func:`hbp_spmm`, slice the real columns back out.
+
+    The padded columns are zero, contribute nothing, and are dropped
+    before returning.  Under ``strategy="stable"`` the surviving columns
+    are bitwise identical to the unpadded launch (the lane reduction is
+    launch-width-invariant); the other strategies agree numerically but
+    may differ by ~1 ulp when the bucket changes the launch width.  This
+    is the entry the serving micro-batcher routes coalesced request
+    blocks through.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    k = x.shape[1]
+    kb = bucket_k(k, buckets)
+    if kb != k:
+        x = jnp.pad(x, ((0, 0), (0, kb - k)))
+    return hbp_spmm(tiles, x, **kwargs)[:, :k]
+
+
 def hbp_spmm(
     tiles: HBPTiles | DeviceTiles,
     x: jax.Array,  # [n_cols, k]
     *,
-    strategy: Literal["fused", "partials", "reference"] = "fused",
+    strategy: Literal["fused", "partials", "reference", "stable"] = "fused",
     interpret: bool | None = None,
     n_rowgroups: int | None = None,
     n_rows: int | None = None,

@@ -16,6 +16,8 @@ __all__ = [
     "hbp_spmv_hashed_ref",
     "tile_contrib_spmm_ref",
     "hbp_spmm_hashed_ref",
+    "tile_contrib_spmm_stable",
+    "hbp_spmm_hashed_stable",
     "unpermute",
 ]
 
@@ -74,6 +76,54 @@ def hbp_spmm_hashed_ref(
     """Full multi-RHS SpMM + combine oracle, output in hashed row order
     [n_rowgroups, group, k]."""
     contrib = tile_contrib_spmm_ref(colblock, data, cols, x_blocked)
+    return jax.ops.segment_sum(contrib, rowgroup, num_segments=n_rowgroups)
+
+
+def tile_contrib_spmm_stable(
+    colblock: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block, k]
+) -> jax.Array:
+    """Batch-width-invariant SpMM contributions [T, group, k].
+
+    Numerically equivalent to :func:`tile_contrib_spmm_ref`, but the lane
+    reduction is an explicitly ordered chain of elementwise adds (unrolled
+    over the static lane dimension) instead of a fused contraction.  XLA
+    cannot reassociate elementwise adds, so a column's bit pattern is
+    independent of how many RHS columns share the launch — the guarantee
+    the serving engine's k-bucketed micro-batching relies on: coalescing a
+    request with arbitrary co-traffic, or padding its bucket with zero
+    columns, never changes its result.  (The einsum oracle and the
+    interpret-mode kernels are ~1 ulp width-dependent at small k.)
+
+    The gather is flat and per lane: each step touches only the [T, group]
+    slots it multiplies, never a [T, col_block, k] segment expansion nor a
+    [T, group, lane, k] product — the largest temporary is [T, group, k],
+    which is what keeps this path's k-scaling near the ideal tile-stream
+    amortization (the einsum oracle loses it to the blown-up intermediates).
+    """
+    n_cb, col_block, k = x_blocked.shape
+    x_flat = x_blocked.reshape(n_cb * col_block, k)
+    base = colblock[:, None] * col_block  # [T, 1] offset of each tile's segment
+    acc = data[:, :, 0, None] * x_flat[base + cols[:, :, 0]]
+    for lane in range(1, data.shape[2]):
+        acc = acc + data[:, :, lane, None] * x_flat[base + cols[:, :, lane]]
+    return acc
+
+
+def hbp_spmm_hashed_stable(
+    rowgroup: jax.Array,
+    colblock: jax.Array,
+    data: jax.Array,
+    cols: jax.Array,
+    x_blocked: jax.Array,
+    *,
+    n_rowgroups: int,
+) -> jax.Array:
+    """Full batch-width-invariant SpMM + combine, hashed row order
+    [n_rowgroups, group, k]."""
+    contrib = tile_contrib_spmm_stable(colblock, data, cols, x_blocked)
     return jax.ops.segment_sum(contrib, rowgroup, num_segments=n_rowgroups)
 
 

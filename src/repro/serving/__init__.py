@@ -1,0 +1,26 @@
+# SpMV-traffic serving: admit a matrix once (content-hashed, autotuned,
+# device-resident), then coalesce concurrent y = A @ x requests into [n, k]
+# micro-batches served by one SpMM tile-stream pass each.  Distinct from
+# repro.serve (the LLM token engine).
+from .autotune import (
+    AutotuneCache,
+    AutotuneResult,
+    autotune_partition,
+    matrix_hash,
+)
+from .batcher import MicroBatcher, SpMVRequest
+from .engine import ServingEngine, Ticket
+from .registry import MatrixPlan, MatrixRegistry
+
+__all__ = [
+    "AutotuneCache",
+    "AutotuneResult",
+    "autotune_partition",
+    "matrix_hash",
+    "MicroBatcher",
+    "SpMVRequest",
+    "ServingEngine",
+    "Ticket",
+    "MatrixPlan",
+    "MatrixRegistry",
+]

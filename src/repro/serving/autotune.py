@@ -1,0 +1,235 @@
+"""Measured partition-config search with a persistent on-disk cache.
+
+``tuned_partition_config`` (core/tile.py) picks a lane width from the nnz
+profile — a heuristic.  A serving system can afford better: the matrix is
+admitted once and then multiplied thousands of times, so a few measured
+SpMM launches per candidate geometry are noise against the traffic they
+optimise.  :func:`autotune_partition` times every candidate from the
+:func:`repro.core.partition.enumerate_configs` search space and keeps the
+fastest, caching the winner on disk keyed by the matrix's content hash so
+the next admission — same process or next process — skips the search
+entirely.
+
+The objective is steady-state multiply time (one ``hbp_spmm`` launch at the
+traffic's typical RHS width), not build time: preprocessing amortizes away
+under serving traffic, the per-request multiply does not.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from pathlib import Path
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.formats import CSRMatrix
+from repro.core.partition import PartitionConfig, enumerate_configs
+from repro.core.tile import build_tiles, tuned_partition_config
+
+__all__ = [
+    "matrix_hash",
+    "AutotuneCache",
+    "AutotuneResult",
+    "autotune_partition",
+    "DEFAULT_CACHE_DIR",
+]
+
+DEFAULT_CACHE_DIR = ".hbp_autotune"
+_CACHE_VERSION = 1
+
+
+def matrix_hash(csr: CSRMatrix) -> str:
+    """Content hash of a CSR matrix: shape + structure + values.
+
+    Two admissions of the same matrix — different objects, different
+    processes — hash identically, which is what keys both the registry's
+    resident-plan lookup and the on-disk autotune cache.
+    """
+    h = hashlib.sha256()
+    h.update(np.asarray(csr.shape, np.int64).tobytes())
+    h.update(np.ascontiguousarray(csr.indptr).tobytes())
+    h.update(np.ascontiguousarray(csr.indices).tobytes())
+    h.update(np.ascontiguousarray(csr.data, dtype=np.float64).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneResult:
+    """Outcome of one :func:`autotune_partition` call."""
+
+    cfg: PartitionConfig
+    cache_hit: bool  # config came from the on-disk cache; no search ran
+    searched: bool  # a measured search ran this call
+    evaluations: int  # candidate geometries actually timed
+    objective_us: Optional[float]  # best measured SpMM time (None: heuristic)
+
+
+class AutotuneCache:
+    """On-disk partition-config cache: one JSON file per matrix hash.
+
+    The directory (default ``.hbp_autotune/``, or ``$HBP_AUTOTUNE_DIR``) is
+    safe to persist across runs and machines of the same matrix corpus —
+    entries are keyed purely by matrix content.  Unreadable or
+    version-mismatched entries are treated as misses, never errors.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        if path is None:
+            path = os.environ.get("HBP_AUTOTUNE_DIR", DEFAULT_CACHE_DIR)
+        self.path = Path(path)
+
+    def _entry(self, key: str) -> Path:
+        return self.path / f"{key}.json"
+
+    def get(self, key: str) -> Optional[dict]:
+        try:
+            entry = json.loads(self._entry(key).read_text())
+        except (OSError, ValueError):
+            return None
+        if entry.get("version") != _CACHE_VERSION or "config" not in entry:
+            return None
+        return entry
+
+    def get_config(self, key: str) -> Optional[PartitionConfig]:
+        entry = self.get(key)
+        if entry is None:
+            return None
+        try:
+            return PartitionConfig(**entry["config"])
+        except TypeError:
+            return None
+
+    def put(self, key: str, cfg: PartitionConfig, **extra) -> None:
+        self.path.mkdir(parents=True, exist_ok=True)
+        entry = {
+            "version": _CACHE_VERSION,
+            "config": dataclasses.asdict(cfg),
+            **extra,
+        }
+        # per-process tmp name + atomic rename: concurrent admits of the
+        # same matrix each install a complete entry, last writer wins
+        tmp = self._entry(key).with_suffix(f".{os.getpid()}.tmp")
+        tmp.write_text(json.dumps(entry, indent=2, sort_keys=True))
+        os.replace(tmp, self._entry(key))
+
+
+def _space_fingerprint(
+    candidates: Sequence[PartitionConfig], k: int, strategy: str
+) -> str:
+    """Content key of a measured search: candidate set, probe width, and
+    the strategy whose cost model was timed.  Stored with searched cache
+    entries so a search over a narrow space (or a different kernel path)
+    does not satisfy later admissions searching a different one."""
+    geoms = sorted((c.row_block, c.col_block, c.group, c.lane) for c in candidates)
+    return hashlib.sha256(repr((geoms, k, strategy)).encode()).hexdigest()[:16]
+
+
+def _measure_spmm_us(
+    csr: CSRMatrix, cfg: PartitionConfig, k: int, repeats: int, strategy: str
+) -> float:
+    """Median microseconds of one k-wide SpMM launch under ``cfg``.
+
+    ``strategy`` should be the path serving will actually run (the
+    registry passes its own), so the search ranks configs under the cost
+    model traffic pays — the jnp paths' k-scaling differs from the fused
+    kernel's, and off-TPU the kernels execute in interpret mode whose
+    timings are meaningless.
+    """
+    from repro.kernels import ops
+
+    tiles = build_tiles(csr, cfg)
+    dt = ops.device_tiles(tiles)
+    meta = dict(
+        n_rowgroups=tiles.n_rowgroups,
+        n_rows=tiles.shape[0],
+        col_block=cfg.col_block,
+        strategy=strategy,
+    )
+    x = np.random.default_rng(0).standard_normal((csr.n_cols, k)).astype(np.float32)
+    ops.hbp_spmm(dt, x, **meta).block_until_ready()  # compile outside the clock
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        ops.hbp_spmm(dt, x, **meta).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def autotune_partition(
+    csr: CSRMatrix,
+    *,
+    key: Optional[str] = None,
+    cache: AutotuneCache | None = None,
+    search: bool = True,
+    candidates: Optional[Sequence[PartitionConfig]] = None,
+    k: int = 8,
+    repeats: int = 3,
+    strategy: str = "stable",
+) -> AutotuneResult:
+    """Pick a :class:`PartitionConfig` for ``csr``, cheapest source first.
+
+    1. on-disk cache hit for the matrix's content hash → no search;
+    2. ``search=True`` → time every candidate (``enumerate_configs`` by
+       default) and keep the fastest;
+    3. ``search=False`` → the ``tuned_partition_config`` nnz-profile
+       heuristic.
+
+    Either way the chosen config is written back to the cache, so the next
+    admission of the same matrix is a pure read.  Cached entries remember
+    *how* they were produced: a heuristic entry satisfies only
+    ``search=False`` callers, and a searched entry satisfies ``search=True``
+    callers only when it covered the same candidate space (and probe
+    width) — so neither a heuristic admission nor a narrow example-sized
+    search can permanently pin a matrix that a full-space admission would
+    have tuned better; the mismatched admission simply re-searches and
+    overwrites.
+    """
+    cache = cache or AutotuneCache()
+    key = key or matrix_hash(csr)
+    if search:
+        # materialize once: generators must survive both the fingerprint
+        # and the measurement loop
+        candidates = (
+            enumerate_configs(csr.shape) if candidates is None else list(candidates)
+        )
+    space = _space_fingerprint(candidates, k, strategy) if search else None
+    entry = cache.get(key)
+    if entry is not None:
+        satisfied = (
+            (entry.get("searched") and entry.get("space") == space)
+            if search
+            else True
+        )
+        cached = cache.get_config(key)
+        if satisfied and cached is not None:
+            return AutotuneResult(
+                cfg=cached, cache_hit=True, searched=False, evaluations=0,
+                objective_us=entry.get("objective_us"),
+            )
+
+    if not search:
+        cfg = tuned_partition_config(csr)
+        cache.put(key, cfg, searched=False, objective_us=None)
+        return AutotuneResult(
+            cfg=cfg, cache_hit=False, searched=False, evaluations=0, objective_us=None
+        )
+
+    best_cfg, best_us = None, float("inf")
+    for cand in candidates:
+        us = _measure_spmm_us(csr, cand, k, repeats, strategy)
+        if us < best_us:
+            best_cfg, best_us = cand, us
+    if best_cfg is None:  # empty candidate list: fall back to the heuristic
+        return autotune_partition(csr, key=key, cache=cache, search=False)
+    cache.put(key, best_cfg, searched=True, objective_us=best_us, space=space)
+    return AutotuneResult(
+        cfg=best_cfg,
+        cache_hit=False,
+        searched=True,
+        evaluations=len(candidates),
+        objective_us=best_us,
+    )

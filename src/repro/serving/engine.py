@@ -1,0 +1,201 @@
+"""The SpMV traffic engine: submit → coalesce → one SpMM launch → slice.
+
+Distinct from :mod:`repro.serve` (the LLM token engine): requests here are
+``y = A @ x`` against matrices resident in a :class:`MatrixRegistry`.
+
+The engine is event-driven and single-threaded by design — `submit` never
+computes, it enqueues and returns a :class:`Ticket`; work happens in
+`poll` (flushes batches whose size or deadline policy fired) and `flush`
+(drains unconditionally, e.g. at shutdown or when a ticket's result is
+demanded).  A caller that wants wall-clock-driven service calls `poll`
+from its own loop; tests and benchmarks inject a virtual ``clock`` and get
+fully deterministic flush decisions.
+
+Instrumentation is part of the contract: per matrix the engine counts
+requests, batches, k-bucket occupancy and padding, p50/p99 request
+latency, per-batch compute seconds, and the admission cost still
+unamortized — :meth:`ServingEngine.stats` snapshots all of it.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.kernels.ops import K_BUCKETS, bucket_k
+
+from .batcher import MicroBatcher, SpMVRequest
+from .registry import MatrixRegistry
+
+__all__ = ["Ticket", "ServingEngine"]
+
+
+class Ticket:
+    """Handle to one submitted request; ``result()`` forces completion."""
+
+    __slots__ = ("_engine", "_req")
+
+    def __init__(self, engine: "ServingEngine", req: SpMVRequest):
+        self._engine = engine
+        self._req = req
+
+    @property
+    def req_id(self) -> int:
+        return self._req.req_id
+
+    def done(self) -> bool:
+        return self._req.done
+
+    def result(self) -> np.ndarray:
+        """The request's ``y``; drains its matrix's queue if still pending."""
+        if not self._req.done:
+            self._engine.flush(self._req.key)
+        assert self._req.result is not None
+        return self._req.result
+
+    def latency_s(self) -> float:
+        if self._req.t_done is None:
+            raise RuntimeError("request not completed yet")
+        return self._req.t_done - self._req.t_submit
+
+
+# latency percentiles are computed over a sliding window of this many most
+# recent requests — a long-lived engine must not grow per-request state
+_LATENCY_WINDOW = 4096
+
+
+class _MatrixCounters:
+    def __init__(self) -> None:
+        self.requests = 0
+        self.batches = 0
+        self.columns = 0  # real RHS columns served
+        self.padded_columns = 0  # bucket slots beyond the real columns
+        self.compute_s = 0.0
+        self.latencies: deque = deque(maxlen=_LATENCY_WINDOW)
+
+
+class ServingEngine:
+    """Micro-batching SpMV server over a :class:`MatrixRegistry`.
+
+    ``max_batch`` is clamped to the top k-bucket so a drained batch always
+    fits one bucketed SpMM launch; ``clock`` supplies "now" for deadlines
+    and latency accounting (inject a virtual clock for determinism —
+    compute seconds are always wall time regardless).
+    """
+
+    def __init__(
+        self,
+        registry: MatrixRegistry,
+        *,
+        max_batch: int = K_BUCKETS[-1],
+        max_wait_s: float = 0.002,
+        buckets: tuple = K_BUCKETS,
+        clock=time.perf_counter,
+    ):
+        if max_batch > buckets[-1]:
+            raise ValueError(
+                f"max_batch={max_batch} exceeds the top k-bucket {buckets[-1]}"
+            )
+        self.registry = registry
+        self.batcher = MicroBatcher(max_batch=max_batch, max_wait_s=max_wait_s)
+        self.buckets = tuple(buckets)
+        self.clock = clock
+        self._counters: Dict[str, _MatrixCounters] = {}
+        self._next_id = 0
+
+    def submit(self, key: str, x) -> Ticket:
+        """Enqueue ``y = A_key @ x``; returns immediately with a ticket."""
+        plan = self.registry.get(key)
+        x = np.asarray(x, np.float32)
+        if x.shape != (plan.shape[1],):
+            raise ValueError(
+                f"x has shape {x.shape}, matrix {key!r} expects ({plan.shape[1]},)"
+            )
+        req = SpMVRequest(key=key, x=x, req_id=self._next_id, t_submit=self.clock())
+        self._next_id += 1
+        self.batcher.add(req)
+        return Ticket(self, req)
+
+    def poll(self, now: Optional[float] = None) -> int:
+        """Flush every batch whose policy fired; returns requests completed."""
+        now = self.clock() if now is None else now
+        served = 0
+        for key in self.batcher.due(now):
+            # a key can owe several full batches after a burst
+            while self.batcher.pending(key) >= self.batcher.max_batch:
+                served += self._run_batch(key)
+            if key in self.batcher.due(now):  # deadline still unmet
+                served += self._run_batch(key)
+        return served
+
+    def flush(self, key: Optional[str] = None) -> int:
+        """Drain everything pending (for ``key``, or all matrices)."""
+        keys = [key] if key is not None else self.batcher.keys_with_pending()
+        served = 0
+        for k in keys:
+            while self.batcher.pending(k):
+                served += self._run_batch(k)
+        return served
+
+    def _run_batch(self, key: str) -> int:
+        batch = self.batcher.take(key)
+        if not batch:
+            return 0
+        plan = self.registry.get(key)
+        X = MicroBatcher.stack(batch)  # [n, k]
+        k = X.shape[1]
+        t0 = time.perf_counter()
+        Y = np.asarray(plan.matmat(X, bucketed=True, buckets=self.buckets))
+        compute_s = time.perf_counter() - t0
+        done = self.clock()
+        ctr = self._counters.setdefault(key, _MatrixCounters())
+        ctr.requests += len(batch)
+        ctr.batches += 1
+        ctr.columns += k
+        ctr.padded_columns += bucket_k(k, self.buckets) - k
+        ctr.compute_s += compute_s
+        for j, req in enumerate(batch):
+            req.result = Y[:, j]
+            req.t_done = done
+            ctr.latencies.append(done - req.t_submit)
+        return len(batch)
+
+    def stats(self) -> dict:
+        """Per-matrix traffic snapshot, joined with registry admission data.
+
+        ``occupancy`` is real columns per batch relative to ``max_batch``
+        (how full the coalescing window runs); ``pad_fraction`` is the share
+        of launched bucket slots that carried padding; latency percentiles
+        cover the most recent ``_LATENCY_WINDOW`` requests; ``amortized_
+        preprocess_s`` is the one-time admission cost divided by requests
+        served so far — the number that justifies the HBP preprocessing
+        under serving traffic.
+        """
+        reg = self.registry.stats()
+        out = {}
+        empty = _MatrixCounters()  # uniform schema for zero-traffic matrices
+        for key in {*reg, *self._counters}:
+            ctr = self._counters.get(key, empty)
+            lat = np.sort(np.asarray(ctr.latencies, np.float64))
+            launched = ctr.columns + ctr.padded_columns
+            out[key] = {
+                **reg.get(key, {}),
+                "requests": ctr.requests,
+                "batches": ctr.batches,
+                "mean_batch_k": ctr.columns / max(ctr.batches, 1),
+                "occupancy": ctr.columns
+                / max(ctr.batches * self.batcher.max_batch, 1),
+                "pad_fraction": ctr.padded_columns / max(launched, 1),
+                "compute_s": ctr.compute_s,
+                "latency_p50_s": float(lat[int(0.50 * (lat.size - 1))]) if lat.size else None,
+                "latency_p99_s": float(lat[int(0.99 * (lat.size - 1))]) if lat.size else None,
+                "amortized_preprocess_s": (
+                    reg[key]["preprocess_s"] / ctr.requests
+                    if key in reg and ctr.requests
+                    else None
+                ),
+                "pending": self.batcher.pending(key),
+            }
+        return out

@@ -1,0 +1,235 @@
+"""Matrix admission: CSR in, device-resident autotuned HBP plan out.
+
+A serving system's defining asymmetry is admit-once / multiply-many: the
+HBP preprocessing pipeline (2D partition → nonlinear hash → tile packing)
+runs once per matrix, and every subsequent request reuses the device-
+resident tiles.  :class:`MatrixRegistry` owns that lifecycle:
+
+* **content addressing** — matrices are keyed by a sha256 over shape +
+  structure + values, so re-admitting an already-resident matrix returns
+  the existing plan without touching the preprocessing pipeline;
+* **autotuned geometry** — the partition config comes from
+  :func:`repro.serving.autotune.autotune_partition` (measured search with a
+  persistent on-disk cache), unless the caller pins an explicit config;
+* **device residency** — tiles are staged to the device once at admission
+  (:func:`repro.kernels.ops.device_tiles`); requests only launch kernels;
+* **amortization bookkeeping** — the one-time preprocessing cost is
+  recorded so :meth:`MatrixRegistry.stats` can report how far traffic has
+  amortized it (the paper's Fig. 7 cost, divided by requests served).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.formats import CSRMatrix
+from repro.core.partition import PartitionConfig
+from repro.core.tile import HBPTiles, build_tiles
+
+from .autotune import AutotuneCache, autotune_partition, matrix_hash
+
+__all__ = ["MatrixPlan", "MatrixRegistry"]
+
+
+@dataclasses.dataclass
+class MatrixPlan:
+    """Everything the serving path needs about one resident matrix."""
+
+    name: str
+    matrix_hash: str
+    shape: tuple
+    nnz: int
+    cfg: PartitionConfig
+    tiles: HBPTiles  # host copy (rebuilds, debugging)
+    device: object  # DeviceTiles pytree, staged once
+    diag: np.ndarray  # main diagonal, host-resident at tile-build time
+    preprocess_s: float  # autotune + tile build + device staging
+    autotune_cache_hit: bool
+    autotune_searched: bool
+    admissions: int = 1  # admit() calls that resolved to this plan
+    strategy: str = "fused"
+    interpret: Optional[bool] = None
+
+    def _meta(self) -> dict:
+        return dict(
+            n_rowgroups=self.tiles.n_rowgroups,
+            n_rows=self.shape[0],
+            col_block=self.cfg.col_block,
+            strategy=self.strategy,
+            interpret=self.interpret,
+        )
+
+    def matvec(self, x) -> np.ndarray:
+        """One-off ``A @ x`` against the resident plan (bypasses batching)."""
+        from repro.kernels import ops
+
+        return ops.hbp_spmv(self.device, x, **self._meta())
+
+    def matmat(self, x, *, bucketed: bool = True, buckets=None):
+        """``A @ X`` for an ``[n, k]`` block; ``bucketed`` pads k to the
+        serving buckets (``buckets`` overrides the default set) so the
+        compile count stays bounded."""
+        from repro.kernels import ops
+
+        if not bucketed:
+            return ops.hbp_spmm(self.device, x, **self._meta())
+        if buckets is None:
+            buckets = ops.K_BUCKETS
+        return ops.hbp_spmm_bucketed(self.device, x, buckets=buckets, **self._meta())
+
+    def operator(self):
+        """The plan as a solver-ready :class:`LinearOperator`."""
+        from repro.solvers.operator import LinearOperator
+
+        return LinearOperator(self.shape, matvec=self.matvec, matmat=self.matmat)
+
+    def jacobi(self):
+        """Jacobi preconditioner built from the admission-time diagonal."""
+        from repro.solvers.precond import jacobi
+
+        return jacobi(self.diag)
+
+
+class MatrixRegistry:
+    """Admit CSR matrices once; hand out device-resident HBP plans.
+
+    ``search=False`` replaces the measured autotune search with the
+    ``tuned_partition_config`` heuristic (still cached); ``candidates``
+    narrows the measured search space; ``strategy``/``interpret`` select
+    the kernel path every plan's launches use.  The default strategy is
+    backend-aware: the fused Pallas kernel on TPU, the batch-width-
+    invariant ``"stable"`` jnp path elsewhere (off-TPU the kernels would
+    run in interpret mode — slow, and ~1 ulp dependent on batch width,
+    which would break the engine's coalescing-invariance guarantee).
+    """
+
+    def __init__(
+        self,
+        *,
+        cache_dir=None,
+        search: bool = True,
+        candidates=None,
+        autotune_k: int = 8,
+        strategy: Optional[str] = None,
+        interpret: Optional[bool] = None,
+    ):
+        if strategy is None:
+            import jax
+
+            strategy = "fused" if jax.default_backend() == "tpu" else "stable"
+        self.cache = AutotuneCache(cache_dir)
+        self.search = search
+        self.candidates = candidates
+        self.autotune_k = autotune_k
+        self.strategy = strategy
+        self.interpret = interpret
+        self._plans: Dict[str, MatrixPlan] = {}
+        self._by_hash: Dict[str, str] = {}
+
+    def admit(
+        self,
+        csr: CSRMatrix,
+        name: Optional[str] = None,
+        *,
+        cfg: Optional[PartitionConfig] = None,
+    ) -> MatrixPlan:
+        """Admit ``csr`` and return its plan.
+
+        Same content twice → the resident plan (no rebuild, no search).
+        Fresh content with a warm on-disk cache → tile build only (the
+        measured search is skipped).  ``cfg`` pins the geometry explicitly
+        and bypasses autotuning altogether.
+        """
+        key = matrix_hash(csr)
+        if key in self._by_hash:
+            plan = self._plans[self._by_hash[key]]
+            if cfg is not None and cfg != plan.cfg:
+                raise ValueError(
+                    f"matrix {key[:12]} is already resident as {plan.name!r} "
+                    f"with config {plan.cfg}; re-admission pinned {cfg} — "
+                    "evict the plan first to rebuild under a different geometry"
+                )
+            plan.admissions += 1
+            return plan
+        if name is not None and name in self._plans:
+            raise ValueError(
+                f"name {name!r} is already bound to matrix "
+                f"{self._plans[name].matrix_hash[:12]}"
+            )
+
+        from repro.kernels import ops
+
+        t0 = time.perf_counter()
+        if cfg is not None:
+            tune_hit, tune_searched = False, False
+        else:
+            tuned = autotune_partition(
+                csr,
+                key=key,
+                cache=self.cache,
+                search=self.search,
+                candidates=self.candidates,
+                k=self.autotune_k,
+                strategy=self.strategy,  # rank configs under the served path
+            )
+            cfg = tuned.cfg
+            tune_hit, tune_searched = tuned.cache_hit, tuned.searched
+        tiles = build_tiles(csr, cfg)
+        device = ops.device_tiles(tiles)
+        diag = csr.diagonal()
+        preprocess_s = time.perf_counter() - t0
+
+        name = name or f"m_{key[:12]}"
+        plan = MatrixPlan(
+            name=name,
+            matrix_hash=key,
+            shape=csr.shape,
+            nnz=csr.nnz,
+            cfg=cfg,
+            tiles=tiles,
+            device=device,
+            diag=diag,
+            preprocess_s=preprocess_s,
+            autotune_cache_hit=tune_hit,
+            autotune_searched=tune_searched,
+            strategy=self.strategy,
+            interpret=self.interpret,
+        )
+        self._plans[name] = plan
+        self._by_hash[key] = name
+        return plan
+
+    def get(self, name: str) -> MatrixPlan:
+        return self._plans[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._plans
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def names(self):
+        return list(self._plans)
+
+    def evict(self, name: str) -> None:
+        plan = self._plans.pop(name)
+        del self._by_hash[plan.matrix_hash]
+
+    def stats(self) -> dict:
+        """Per-matrix admission/preprocessing snapshot (engine adds traffic)."""
+        return {
+            name: {
+                "matrix_hash": p.matrix_hash[:12],
+                "shape": tuple(p.shape),
+                "nnz": p.nnz,
+                "config": dataclasses.asdict(p.cfg),
+                "admissions": p.admissions,
+                "preprocess_s": p.preprocess_s,
+                "autotune_cache_hit": p.autotune_cache_hit,
+                "autotune_searched": p.autotune_searched,
+            }
+            for name, p in self._plans.items()
+        }

@@ -9,6 +9,7 @@ from .cg import cg
 from .chebyshev import chebyshev, estimate_spectrum
 from .operator import LinearOperator, aslinearoperator
 from .power import pagerank, power_iteration, transition_matrix
+from .precond import jacobi
 
 __all__ = [
     "SolveResult",
@@ -22,4 +23,5 @@ __all__ = [
     "power_iteration",
     "pagerank",
     "transition_matrix",
+    "jacobi",
 ]

@@ -6,6 +6,11 @@ standard Krylov method production circuit solvers run on exactly these
 matrices.  Two operator applications per iteration; like :func:`cg` it is
 vectorised over an ``[n, k]`` RHS block (per-column scalars, shared SpMM
 launches).
+
+``M`` right-preconditions the iteration (``A M`` Krylov space, update
+directions mapped through ``M`` before entering ``x``): the residual keeps
+its plain meaning ``b - A x``, so the convergence test is unchanged, and
+``M=None`` reduces exactly to the unpreconditioned update.
 """
 from __future__ import annotations
 
@@ -25,15 +30,19 @@ def bicgstab(
     x0: jax.Array | None = None,
     tol: float = 1e-6,
     maxiter: int = 400,
+    M=None,
 ) -> SolveResult:
     """Solve ``A x = b`` for general (nonsymmetric) ``A``.
 
-    On Krylov breakdown (``rho`` or ``omega`` hitting exactly zero —
-    residual already at machine floor) the guarded divisions freeze the
-    iterate instead of producing NaNs, and the loop exits on the residual
-    test or ``maxiter``.
+    ``M`` (optional) is a right preconditioner ``M ~= A^{-1}``, e.g.
+    :func:`~repro.solvers.precond.jacobi` — one extra operator product per
+    operator application.  On Krylov breakdown (``rho`` or ``omega``
+    hitting exactly zero — residual already at machine floor) the guarded
+    divisions freeze the iterate instead of producing NaNs, and the loop
+    exits on the residual test or ``maxiter``.
     """
     op = aslinearoperator(A)
+    apply_M = aslinearoperator(M) if M is not None else (lambda v: v)
     b = jnp.asarray(b, jnp.float32)
     x = jnp.zeros_like(b) if x0 is None else jnp.asarray(x0, jnp.float32)
     bnorm = jnp.maximum(l2norm(b), jnp.finfo(jnp.float32).tiny)
@@ -57,12 +66,14 @@ def bicgstab(
         rho_new = jnp.sum(rhat * r, axis=0)
         beta = safe_div(rho_new * alpha, rho * omega)
         p = r + beta * (p - omega * v)
-        v = op(p)
+        phat = apply_M(p)
+        v = op(phat)
         alpha = safe_div(rho_new, jnp.sum(rhat * v, axis=0))
         s = r - alpha * v
-        t = op(s)
+        shat = apply_M(s)
+        t = op(shat)
         omega = safe_div(jnp.sum(t * s, axis=0), jnp.sum(t * t, axis=0))
-        x = x + alpha * p + omega * s
+        x = x + alpha * phat + omega * shat
         r = s - omega * t
         hist = hist.at[k + 1].set(l2norm(r))
         return k + 1, x, r, p, v, rho_new, alpha, omega, hist

@@ -1,6 +1,6 @@
 """Conjugate gradients on the HBP operator (SPD systems).
 
-Textbook CG (Hestenes–Stiefel) with two twists that matter here:
+Textbook (preconditioned) CG with two twists that matter here:
 
 * the matrix product is whatever :class:`~repro.solvers.operator.LinearOperator`
   supplies — for :class:`HBPTiles` one Pallas kernel launch per iteration;
@@ -8,6 +8,11 @@ Textbook CG (Hestenes–Stiefel) with two twists that matter here:
   then the *vectorised* CG (independent step lengths per column, one
   shared SpMM launch), so the tile stream is read once per iteration for
   all ``k`` systems instead of ``k`` times.
+
+``M`` is an optional preconditioner ``M ~= A^{-1}`` (e.g.
+:func:`~repro.solvers.precond.jacobi`), applied as one extra operator
+product per iteration; convergence is still tested on the true residual.
+With ``M=None`` the update algebra reduces exactly to plain CG.
 """
 from __future__ import annotations
 
@@ -27,40 +32,48 @@ def cg(
     x0: jax.Array | None = None,
     tol: float = 1e-6,
     maxiter: int = 200,
+    M=None,
 ) -> SolveResult:
     """Solve ``A x = b`` for SPD ``A``; ``b`` is ``[n]`` or ``[n, k]``.
 
+    ``M`` (optional) preconditions the iteration: for SPD ``M ~= A^{-1}``
+    this is standard PCG, minimising the same ``A``-norm error over the
+    preconditioned Krylov space — badly scaled diagonals (circuit
+    matrices) converge in far fewer iterations under :func:`jacobi`.
     Converges when every column satisfies ``||r|| <= tol * ||b||``.
     The loop is a ``lax.while_loop`` — jit-compatible end to end.
     """
     op = aslinearoperator(A)
+    apply_M = aslinearoperator(M) if M is not None else (lambda v: v)
     b = jnp.asarray(b, jnp.float32)
     x = jnp.zeros_like(b) if x0 is None else jnp.asarray(x0, jnp.float32)
     bnorm = jnp.maximum(l2norm(b), jnp.finfo(jnp.float32).tiny)
 
     r = b - op(x)
-    p = r
-    rs = jnp.sum(r * r, axis=0)
-    hist = history_init(maxiter, jnp.sqrt(rs))
+    z = apply_M(r)
+    p = z
+    rz = jnp.sum(r * z, axis=0)
+    hist = history_init(maxiter, l2norm(r))
 
     def cond(state):
-        k, _, _, _, rs, _ = state
-        return (k < maxiter) & jnp.any(jnp.sqrt(rs) > tol * bnorm)
+        k, _, r, _, _, _ = state
+        return (k < maxiter) & jnp.any(l2norm(r) > tol * bnorm)
 
     def body(state):
-        k, x, r, p, rs, hist = state
+        k, x, r, p, rz, hist = state
         Ap = op(p)
-        alpha = safe_div(rs, jnp.sum(p * Ap, axis=0))
+        alpha = safe_div(rz, jnp.sum(p * Ap, axis=0))
         x = x + alpha * p
         r = r - alpha * Ap
-        rs_new = jnp.sum(r * r, axis=0)
-        beta = safe_div(rs_new, rs)
-        p = r + beta * p
-        hist = hist.at[k + 1].set(jnp.sqrt(rs_new))
-        return k + 1, x, r, p, rs_new, hist
+        z = apply_M(r)
+        rz_new = jnp.sum(r * z, axis=0)
+        beta = safe_div(rz_new, rz)
+        p = z + beta * p
+        hist = hist.at[k + 1].set(l2norm(r))
+        return k + 1, x, r, p, rz_new, hist
 
-    k, x, r, p, rs, hist = jax.lax.while_loop(cond, body, (0, x, r, p, rs, hist))
-    res = jnp.sqrt(rs)
+    k, x, r, p, rz, hist = jax.lax.while_loop(cond, body, (0, x, r, p, rz, hist))
+    res = l2norm(r)
     return SolveResult(
         x=x,
         converged=jnp.all(res <= tol * bnorm),

@@ -1,0 +1,55 @@
+"""Preconditioners as :class:`LinearOperator` compositions.
+
+A preconditioner ``M ~= A^{-1}`` enters the Krylov loops (``cg``,
+``bicgstab``) as just another operator application, so it composes with
+every matrix container the solvers accept — and it stays inside the
+``lax.while_loop`` like the SpMV itself.
+
+:func:`jacobi` is the diagonal (point-Jacobi) preconditioner.  Its input
+is deliberately flexible: the diagonal is host-resident anyway at
+tile-build time (the CSR matrix is on the host while the HBP tiles are
+constructed; the serving registry snapshots it into the plan), so there is
+never a reason to recover it from the device format.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSRMatrix
+
+from .operator import LinearOperator
+
+__all__ = ["jacobi"]
+
+
+def jacobi(A) -> LinearOperator:
+    """Jacobi preconditioner ``M = diag(A)^{-1}`` as a LinearOperator.
+
+    ``A`` may be a :class:`CSRMatrix` (diagonal extracted on the host), a
+    dense 2-D array, or the diagonal itself as a 1-D vector — e.g. the
+    one a serving :class:`~repro.serving.registry.MatrixPlan` captured at
+    admission.  Zero diagonal entries fall back to the identity (scale 1)
+    so the operator is always well defined.
+    """
+    if isinstance(A, CSRMatrix):
+        diag = A.diagonal()
+    else:
+        arr = np.asarray(A)
+        if arr.ndim == 2:
+            diag = np.diagonal(arr)
+        elif arr.ndim == 1:
+            diag = arr
+        else:
+            raise ValueError(
+                f"jacobi expects a matrix or a 1-D diagonal, got ndim={arr.ndim}"
+            )
+    inv = jnp.asarray(
+        np.where(diag != 0, 1.0 / np.where(diag != 0, diag, 1.0), 1.0), jnp.float32
+    )
+    n = inv.shape[0]
+    return LinearOperator(
+        (n, n),
+        matvec=lambda x: inv * x,
+        matmat=lambda x: inv[:, None] * x,
+    )

@@ -1,0 +1,262 @@
+"""The SpMV serving subsystem: registry, micro-batcher, engine.
+
+The load-bearing property is coalescing invariance: a request's result
+must be bitwise independent of whatever traffic it was batched with —
+mixed-k batches, padded bucket slots, two matrices interleaved — and
+bitwise identical to serving it alone (a sequential spmv call through the
+same plan).  The registry side covers content-addressed admission and the
+flush policies of the batcher are exercised on a virtual clock.
+"""
+import numpy as np
+import pytest
+
+from repro.core import PartitionConfig, build_tiles, csr_from_dense, spmv
+from repro.core.matrices import banded_fem, circuit
+from repro.kernels import ops
+from repro.serving import MatrixRegistry, MicroBatcher, ServingEngine, SpMVRequest
+
+CFG = PartitionConfig(row_block=64, col_block=128, group=8, lane=16)
+
+
+@pytest.fixture()
+def two_matrices():
+    A = circuit(150, seed=1, n_dense_rows=2, dense_row_frac=0.05)
+    B = banded_fem(130, seed=3, band=4, fill=0.9)
+    return A, B
+
+
+@pytest.fixture()
+def registry(tmp_path):
+    # pinned config: admission cost stays trivial; autotune has its own tests
+    reg = MatrixRegistry(cache_dir=tmp_path / "cache", search=False)
+    return reg
+
+
+# --- bucket arithmetic ----------------------------------------------------
+
+
+def test_bucket_k():
+    assert [ops.bucket_k(k) for k in (1, 2, 3, 4, 5, 8, 9, 16)] == [
+        1, 2, 4, 4, 8, 8, 16, 16,
+    ]
+    assert ops.bucket_k(17) == 32  # beyond the top bucket: multiples of it
+    with pytest.raises(ValueError):
+        ops.bucket_k(0)
+
+
+def test_hbp_spmm_bucketed_matches_unpadded(rng):
+    dense = (rng.standard_normal((60, 80)) * (rng.random((60, 80)) < 0.1)).astype(
+        np.float32
+    )
+    tiles = build_tiles(csr_from_dense(dense), CFG)
+    X = rng.standard_normal((80, 5)).astype(np.float32)
+    Y = np.asarray(ops.hbp_spmm_bucketed(tiles, X, strategy="stable"))
+    assert Y.shape == (60, 5)
+    np.testing.assert_allclose(Y, dense @ X, rtol=1e-4, atol=1e-4)
+
+
+def test_stable_strategy_is_batch_width_invariant(rng):
+    """The kernel-level guarantee the engine's bitwise contract rests on:
+    a column's bits do not depend on the launch width or slot position."""
+    dense = (rng.standard_normal((120, 150)) * (rng.random((120, 150)) < 0.1)).astype(
+        np.float32
+    )
+    tiles = build_tiles(csr_from_dense(dense), CFG)
+    X = rng.standard_normal((150, 16)).astype(np.float32)
+    Y16 = np.asarray(ops.hbp_spmm(tiles, X, strategy="stable"))
+    for k in (1, 2, 3, 5, 8):
+        Yk = np.asarray(ops.hbp_spmm(tiles, X[:, :k], strategy="stable"))
+        assert np.array_equal(Yk, Y16[:, :k])
+    # single-vector spmv == any column of any launch
+    for j in (0, 7, 15):
+        yj = np.asarray(ops.hbp_spmv(tiles, X[:, j], strategy="stable"))
+        assert np.array_equal(yj, Y16[:, j])
+
+
+# --- micro-batcher policy (pure queueing, virtual time) -------------------
+
+
+def _req(key, n, i, t):
+    return SpMVRequest(key=key, x=np.zeros(n, np.float32), req_id=i, t_submit=t)
+
+
+def test_batcher_flushes_on_size():
+    b = MicroBatcher(max_batch=4, max_wait_s=10.0)
+    for i in range(3):
+        b.add(_req("A", 8, i, t=0.0))
+    assert b.due(now=0.001) == []  # neither full nor overdue
+    b.add(_req("A", 8, 3, t=0.0))
+    assert b.due(now=0.001) == ["A"]
+    batch = b.take("A")
+    assert [r.req_id for r in batch] == [0, 1, 2, 3]  # FIFO
+    assert b.pending("A") == 0
+
+
+def test_batcher_flushes_on_deadline():
+    b = MicroBatcher(max_batch=16, max_wait_s=0.5)
+    b.add(_req("A", 8, 0, t=1.0))
+    b.add(_req("B", 8, 1, t=1.2))
+    assert b.due(now=1.4) == []
+    assert b.due(now=1.5) == ["A"]  # A's oldest hit the deadline, B not yet
+    assert sorted(b.due(now=1.8)) == ["A", "B"]
+
+
+def test_batcher_keeps_matrices_separate():
+    b = MicroBatcher(max_batch=2, max_wait_s=10.0)
+    b.add(_req("A", 8, 0, t=0.0))
+    b.add(_req("B", 8, 1, t=0.0))
+    b.add(_req("A", 8, 2, t=0.0))
+    assert b.due(now=0.0) == ["A"]  # A full; B alone stays queued
+    assert {r.key for r in b.take("A")} == {"A"}
+    assert b.pending("B") == 1
+
+
+# --- engine: correctness, bitwise coalescing invariance -------------------
+
+
+def test_mixed_k_two_matrices_bitwise_vs_sequential(two_matrices, registry, rng):
+    """Acceptance: mixed-k concurrent requests against two registered
+    matrices == sequential per-request spmv, bitwise, padded slots and
+    all."""
+    A, B = two_matrices
+    pa = registry.admit(A, "A")
+    pb = registry.admit(B, "B")
+    eng = ServingEngine(registry, max_wait_s=1e9, max_batch=8)
+
+    xs = {"A": [], "B": []}
+    tickets = []
+    rngs = np.random.default_rng(7)
+    # interleaved submits with deliberately awkward totals: A gets 11
+    # (batches of 8 + 3 -> buckets 8 and 4, one padded slot each), B gets 5
+    # (bucket 8, three padded slots)
+    for i in range(16):
+        key = "A" if i % 3 != 2 else "B"
+        n_cols = (pa if key == "A" else pb).shape[1]
+        x = rngs.standard_normal(n_cols).astype(np.float32)
+        xs[key].append(x)
+        tickets.append((key, x, eng.submit(key, x)))
+    assert len(xs["A"]) == 11 and len(xs["B"]) == 5
+
+    served = eng.flush()
+    assert served == 16
+    for key, x, ticket in tickets:
+        plan = pa if key == "A" else pb
+        y_seq = np.asarray(plan.matvec(x))  # sequential spmv, same plan
+        assert np.array_equal(np.asarray(ticket.result()), y_seq)
+        # and numerically right against the CSR reference
+        csr = A if key == "A" else B
+        np.testing.assert_allclose(
+            ticket.result(), spmv(csr, x.astype(np.float64)), rtol=1e-4, atol=1e-4
+        )
+
+    stats = eng.stats()
+    assert stats["A"]["requests"] == 11 and stats["A"]["batches"] == 2
+    assert stats["B"]["requests"] == 5 and stats["B"]["batches"] == 1
+    assert stats["B"]["pad_fraction"] == pytest.approx(3 / 8)
+    assert stats["A"]["latency_p99_s"] is not None
+    assert stats["A"]["amortized_preprocess_s"] == pytest.approx(
+        stats["A"]["preprocess_s"] / 11
+    )
+
+
+def test_engine_deadline_flush_on_virtual_clock(two_matrices, registry):
+    A, _ = two_matrices
+    plan = registry.admit(A, "A")
+    now = [0.0]
+    eng = ServingEngine(registry, max_wait_s=0.010, max_batch=8, clock=lambda: now[0])
+    t1 = eng.submit("A", np.ones(plan.shape[1], np.float32))
+    assert eng.poll() == 0  # deadline not reached
+    now[0] = 0.005
+    assert eng.poll() == 0
+    now[0] = 0.011
+    assert eng.poll() == 1  # deadline flush, batch of one
+    assert t1.done()
+    assert t1.latency_s() == pytest.approx(0.011)
+
+
+def test_engine_burst_drains_multiple_full_batches(two_matrices, registry):
+    A, _ = two_matrices
+    plan = registry.admit(A, "A")
+    now = [0.0]
+    eng = ServingEngine(registry, max_wait_s=0.010, max_batch=4, clock=lambda: now[0])
+    tickets = [
+        eng.submit("A", np.ones(plan.shape[1], np.float32)) for _ in range(10)
+    ]
+    assert eng.poll() == 8  # two full batches fire immediately; 2 left waiting
+    assert eng.stats()["A"]["pending"] == 2
+    now[0] = 0.02
+    assert eng.poll() == 2  # remainder goes out on deadline
+    assert all(t.done() for t in tickets)
+    assert eng.stats()["A"]["batches"] == 3
+
+
+def test_ticket_result_forces_flush(two_matrices, registry):
+    A, _ = two_matrices
+    plan = registry.admit(A, "A")
+    eng = ServingEngine(registry, max_wait_s=1e9)
+    x = np.arange(plan.shape[1], dtype=np.float32)
+    t = eng.submit("A", x)
+    assert not t.done()
+    y = t.result()  # demand-driven drain
+    assert t.done()
+    assert np.array_equal(y, np.asarray(plan.matvec(x)))
+
+
+def test_engine_custom_buckets_reach_the_kernel(two_matrices, registry):
+    """The engine's buckets must drive both the kernel padding and the
+    accounting: with a single 8-wide bucket, a batch of 5 pads 3 slots."""
+    A, _ = two_matrices
+    plan = registry.admit(A, "A")
+    eng = ServingEngine(registry, max_wait_s=1e9, max_batch=8, buckets=(8,))
+    xs = [np.full(plan.shape[1], i + 1.0, np.float32) for i in range(5)]
+    tickets = [eng.submit("A", x) for x in xs]
+    eng.flush()
+    for x, t in zip(xs, tickets):
+        assert np.array_equal(np.asarray(t.result()), np.asarray(plan.matvec(x)))
+    assert eng.stats()["A"]["pad_fraction"] == pytest.approx(3 / 8)
+
+
+def test_engine_rejects_bad_submissions(two_matrices, registry):
+    A, _ = two_matrices
+    registry.admit(A, "A")
+    eng = ServingEngine(registry)
+    with pytest.raises(KeyError):
+        eng.submit("unknown", np.ones(4, np.float32))
+    with pytest.raises(ValueError, match="expects"):
+        eng.submit("A", np.ones(3, np.float32))
+    with pytest.raises(ValueError, match="k-bucket"):
+        ServingEngine(registry, max_batch=64)
+
+
+# --- registry -------------------------------------------------------------
+
+
+def test_registry_content_addressing(two_matrices, registry):
+    A, B = two_matrices
+    plan = registry.admit(A, "A")
+    again = registry.admit(A, "A-alias")  # same content: alias is ignored
+    assert again is plan
+    assert plan.admissions == 2
+    assert len(registry) == 1
+    registry.admit(B, "B")
+    assert sorted(registry.names()) == ["A", "B"]
+    with pytest.raises(ValueError, match="already bound"):
+        registry.admit(circuit(80, seed=9), "A")
+    registry.evict("A")
+    assert "A" not in registry and len(registry) == 2 - 1
+
+
+def test_registry_plan_composes_with_solvers(registry, rng):
+    """plan.operator()/plan.jacobi(): the serving plan is solver-ready."""
+    from repro.solvers import cg
+
+    n = 96
+    R = rng.standard_normal((n, n)) * 0.02
+    S = (np.eye(n) + R @ R.T).astype(np.float32)
+    plan = registry.admit(csr_from_dense(S), "spd")
+    np.testing.assert_allclose(np.asarray(plan.diag), np.diagonal(S), rtol=1e-6)
+    b = rng.standard_normal(n).astype(np.float32)
+    res = cg(plan.operator(), b, tol=1e-6, maxiter=300, M=plan.jacobi())
+    assert bool(res.converged)
+    x_ref = np.linalg.solve(S.astype(np.float64), b)
+    assert np.abs(np.asarray(res.x) - x_ref).max() / np.abs(x_ref).max() < 1e-4

@@ -80,6 +80,48 @@ def test_spmv_routes_2d_rhs_to_spmm(rng):
     np.testing.assert_allclose(spmm(csr, X), dense @ X, rtol=1e-4, atol=1e-4)
 
 
+def test_spmm_k1_column_vector_keeps_shape(rng):
+    """Regression: an [n, 1] RHS takes the SpMM path on every container and
+    comes back as [n, 1] — never silently squeezed to [n]."""
+    dense = (rng.standard_normal((60, 70)) * (rng.random((60, 70)) < 0.15)).astype(
+        np.float32
+    )
+    csr = csr_from_dense(dense)
+    tiles = build_tiles(csr, PartitionConfig(row_block=32, col_block=32, group=8, lane=8))
+    hbp = build_hbp(csr, PartitionConfig(row_block=32, col_block=32, group=8, lane=8), warp=8)
+    x = rng.standard_normal((70, 1)).astype(np.float32)
+    want = dense @ x
+    for A in (csr, tiles, hbp):
+        for fn in (spmv, spmm):
+            y = np.asarray(fn(A, x))
+            assert y.shape == (60, 1), f"{type(A).__name__}/{fn.__name__}: {y.shape}"
+            np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+    # jnp backends too
+    assert np.asarray(spmm(csr, x, backend="jnp")).shape == (60, 1)
+    assert np.asarray(spmv(tiles, x, backend="jnp")).shape == (60, 1)
+
+
+def test_spmv_dispatches_nested_list_by_true_rank(rng):
+    """A 2-D input without an .ndim attribute (nested list) must still
+    route to the SpMM path instead of falling through to 1-D spmv."""
+    dense = (rng.standard_normal((40, 30)) * (rng.random((40, 30)) < 0.2)).astype(
+        np.float32
+    )
+    csr = csr_from_dense(dense)
+    x = rng.standard_normal((30, 1)).astype(np.float32)
+    y = np.asarray(spmv(csr, x.tolist()))
+    assert y.shape == (40, 1)
+    np.testing.assert_allclose(y, dense @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_spmv_reject_wrong_rank(rng):
+    csr = csr_from_dense(np.eye(8, dtype=np.float32))
+    with pytest.raises(ValueError, match="spmm expects"):
+        spmm(csr, np.ones(8, np.float32))
+    with pytest.raises(ValueError, match="spmv expects"):
+        spmv(csr, np.ones((8, 1, 1), np.float32))
+
+
 def test_spmm_empty_matrix():
     tiles = build_tiles(
         csr_from_dense(np.zeros((32, 32), np.float32)),
