@@ -1,0 +1,55 @@
+"""GNN aggregation throughput: HBP SpMM vs the CSR oracle vs dense.
+
+One row per (aggregation op, feature width): neighborhood aggregation over
+a power-law graph at k in {16, 64, 128, 256} — k = 256 exercises the
+lane-tiled k loop (two sequential 128-lane passes over the tile stream).
+The derived column reports edge throughput (stored-entry multiplies per
+second at that width); the dense row anchors the sparse-vs-dense tradeoff
+on the same launch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.spmv import csr_spmm_jnp
+from repro.core.tile import build_tiles, tuned_partition_config
+from repro.graph import degrees, make_aggregator, rmat_graph
+
+from .common import emit, timeit
+
+K_SWEEP = (16, 64, 128, 256)
+DENSE_MAX_NODES = 1 << 12  # the dense adjacency anchor stops paying past this
+
+
+def main(full: bool = False) -> None:
+    n = 1 << (13 if full else 12)
+    G = rmat_graph(n, 16.0, seed=7)
+    deg = degrees(G)
+    tiles = build_tiles(G, tuned_partition_config(G))  # built once, shared
+
+    indptr = jnp.asarray(G.indptr)
+    indices = jnp.asarray(G.indices)
+    data = jnp.asarray(G.data, jnp.float32)
+    dense = jnp.asarray(G.to_dense(), jnp.float32) if n <= DENSE_MAX_NODES else None
+
+    rng = np.random.default_rng(0)
+    for k in K_SWEEP:
+        X = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+        edge_mults = G.nnz * k
+        for op in ("sum", "mean", "max"):
+            agg = make_aggregator(tiles, op=op, degree=deg)
+            t = timeit(lambda: agg(X).block_until_ready())
+            emit(f"gnn_hbp_{op}_k{k}", t, f"{edge_mults / t / 1e9:.2f}Gmul/s")
+        t_csr = timeit(
+            lambda: csr_spmm_jnp(indptr, indices, data, X, n).block_until_ready()
+        )
+        emit(f"gnn_csr_sum_k{k}", t_csr, f"{edge_mults / t_csr / 1e9:.2f}Gmul/s")
+        if dense is not None:
+            t_dense = timeit(lambda: (dense @ X).block_until_ready())
+            emit(f"gnn_dense_k{k}", t_dense, f"dense_vs_csr={t_dense / t_csr:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

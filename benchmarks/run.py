@@ -14,11 +14,12 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,memtraffic,schedule,roofline,solvers,traffic")
+    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,memtraffic,schedule,roofline,solvers,traffic,gnn")
     args = ap.parse_args()
 
     from . import (
         bench_combine,
+        bench_gnn,
         bench_memtraffic,
         bench_preprocess,
         bench_roofline,
@@ -39,6 +40,7 @@ def main() -> None:
         "roofline": bench_roofline.main,    # EXPERIMENTS §Roofline
         "solvers": bench_solvers.main,      # workload level (beyond-paper)
         "traffic": bench_traffic.main,      # serving engine (beyond-paper)
+        "gnn": bench_gnn.main,              # graph aggregation (beyond-paper)
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

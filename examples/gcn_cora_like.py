@@ -1,0 +1,130 @@
+"""GCN + GraphSAGE inference on a Cora-like power-law graph over HBP.
+
+    PYTHONPATH=src python examples/gcn_cora_like.py
+
+The GNN workload end to end on the serving stack: build a synthetic
+citation-network-shaped graph (2708 nodes, the Cora node count, power-law
+degrees), admit its adjacencies to a MatrixRegistry — content-hashed,
+autotune-cached in ``.hbp_autotune/`` — and run
+
+* a 2-layer GCN over the symmetric-normalized self-loop adjacency
+  (sum aggregation == one HBP SpMM per layer), and
+* a 2-layer GraphSAGE with max aggregation over the raw adjacency
+  (the max-monoid kernel path), aggregating 256-wide input features —
+  wider than one 128-lane tile, so the kernel's lane-tiled k loop carries
+  the layer.
+
+Both forwards are checked against a numpy oracle; repeated calls reuse
+the resident device tiles (the admit-once / infer-many asymmetry).
+"""
+import time
+
+import numpy as np
+
+import jax
+
+from repro.graph import (
+    add_self_loops,
+    degrees,
+    gcn_forward,
+    init_gcn,
+    init_sage,
+    normalize_adjacency,
+    plan_aggregator,
+    power_law_graph,
+    sage_forward,
+)
+from repro.serving import MatrixRegistry
+
+N_NODES = 2708  # Cora's node count
+N_FEATURES = 256  # > one 128-lane tile: the lane-tiled k loop engages
+N_CLASSES = 7
+
+
+def sum_oracle(csr, X):
+    rows = np.repeat(np.arange(csr.n_rows), csr.row_nnz())
+    out = np.zeros((csr.n_rows, X.shape[1]))
+    np.add.at(out, rows, csr.data[:, None] * X[csr.indices])
+    return out
+
+
+def max_oracle(csr, X):
+    rows = np.repeat(np.arange(csr.n_rows), csr.row_nnz())
+    out = np.full((csr.n_rows, X.shape[1]), -np.inf, np.float32)
+    np.maximum.at(out, rows, (csr.data[:, None] * X[csr.indices]).astype(np.float32))
+    out[np.isneginf(out)] = 0.0
+    return out
+
+
+def main() -> None:
+    print("== GCN / GraphSAGE on HBP message passing ==")
+    G = power_law_graph(N_NODES, 8.0, seed=0)
+    deg = degrees(G)
+    print(
+        f"graph: {G.shape[0]:,} nodes, {G.nnz:,} edges, "
+        f"max degree {int(deg.max())}, median {int(np.median(deg))}"
+    )
+
+    # admit both adjacency views once; layers reuse the resident plans
+    reg = MatrixRegistry(search=False)  # nnz-profile heuristic, disk-cached
+    t0 = time.perf_counter()
+    gcn_plan = reg.admit(normalize_adjacency(add_self_loops(G), "sym"), "cora/gcn")
+    raw_plan = reg.admit(G, "cora/raw")
+    print(f"admitted 2 adjacencies in {time.perf_counter() - t0:.2f}s "
+          f"(lane={gcn_plan.cfg.lane}, tiles={gcn_plan.tiles.n_tiles})")
+
+    rng = np.random.default_rng(1)
+    X = rng.standard_normal((N_NODES, N_FEATURES)).astype(np.float32)
+
+    # --- GCN ---------------------------------------------------------------
+    params = init_gcn(jax.random.PRNGKey(0), [N_FEATURES, 64, N_CLASSES])
+    agg = plan_aggregator(gcn_plan)
+    fwd = jax.jit(lambda p, x: gcn_forward(agg, p, x))
+    logits = np.asarray(fwd(params, X))  # compile + run
+    t0 = time.perf_counter()
+    for _ in range(5):
+        fwd(params, X).block_until_ready()
+    gcn_ms = (time.perf_counter() - t0) / 5 * 1e3
+
+    csr_hat = normalize_adjacency(add_self_loops(G), "sym")
+    h = np.maximum(sum_oracle(csr_hat, X @ np.asarray(params[0].W)) + np.asarray(params[0].b), 0)
+    want = sum_oracle(csr_hat, h @ np.asarray(params[1].W)) + np.asarray(params[1].b)
+    err = np.abs(logits - want).max() / (np.abs(want).max() + 1e-12)
+    print(f"GCN     [{N_FEATURES} -> 64 -> {N_CLASSES}]: {gcn_ms:6.1f} ms/forward, "
+          f"rel err vs oracle {err:.2e}")
+    assert err < 1e-5
+
+    # --- GraphSAGE (max aggregation: the max-monoid kernel path) -----------
+    sparams = init_sage(jax.random.PRNGKey(1), [N_FEATURES, 64, N_CLASSES])
+    sagg = plan_aggregator(raw_plan, op="max")
+    sfwd = jax.jit(lambda p, x: sage_forward(sagg, p, x))
+    slogits = np.asarray(sfwd(sparams, X))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        sfwd(sparams, X).block_until_ready()
+    sage_ms = (time.perf_counter() - t0) / 5 * 1e3
+
+    hs = np.maximum(
+        X @ np.asarray(sparams[0].W_self)
+        + max_oracle(G, X) @ np.asarray(sparams[0].W_neigh)
+        + np.asarray(sparams[0].b),
+        0,
+    ).astype(np.float32)
+    wants = (
+        hs @ np.asarray(sparams[1].W_self)
+        + max_oracle(G, hs) @ np.asarray(sparams[1].W_neigh)
+        + np.asarray(sparams[1].b)
+    )
+    serr = np.abs(slogits - wants).max() / (np.abs(wants).max() + 1e-12)
+    print(f"SAGEmax [{N_FEATURES} -> 64 -> {N_CLASSES}]: {sage_ms:6.1f} ms/forward, "
+          f"rel err vs oracle {serr:.2e}  (k=256 lane-tiled)")
+    assert serr < 1e-5
+
+    stats = reg.stats()["cora/gcn"]
+    print(f"plan reuse: admissions={stats['admissions']}, "
+          f"preprocess {stats['preprocess_s']:.2f}s amortized over every layer call")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Neighborhood aggregation operators on the HBP tile format.
+
+The message-passing primitive ``agg_{u in N(v)} x_u`` for a whole feature
+block X: [n, k] is one HBP SpMM launch —
+
+* ``sum``  — ``A @ X`` under the standard (+) combine;
+* ``mean`` — ``A @ X`` divided by the in-degree (or serve a row-stochastic
+  adjacency and "sum" IS "mean", see :func:`~repro.graph.graph.
+  normalize_adjacency`);
+* ``max``  — ``A @ X`` under the max monoid (``combine="max"`` in
+  :mod:`repro.kernels.ops`): per output row the max of ``a_vu * x_u`` over
+  stored neighbors, 0 for isolated nodes.
+
+Feature widths beyond 128 tile over lanes inside the kernel wrapper (the
+lane-tiled k loop), so k = 256/512 GNN features stay on the fast path.
+
+:func:`make_aggregator` stages the tiles to the device once and returns a
+traceable closure — the form the GNN layers (:mod:`repro.graph.layers_gnn`)
+compose and ``jax.jit`` end to end.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSRMatrix
+from repro.core.tile import HBPTiles, build_tiles, tuned_partition_config
+
+from .graph import degrees
+
+__all__ = ["AGGREGATIONS", "aggregate", "make_aggregator", "plan_aggregator"]
+
+AGGREGATIONS = ("sum", "mean", "max")
+
+
+def _mean_divisor(degree, n_rows: int) -> jax.Array:
+    """[n, 1] clamped in-degree: mean over an empty neighborhood is 0."""
+    d = jnp.asarray(degree, jnp.float32).reshape(n_rows, 1)
+    return jnp.maximum(d, 1.0)
+
+
+def aggregate(
+    tiles: HBPTiles,
+    x: jax.Array,  # [n, k] node features
+    *,
+    op: str = "sum",
+    degree=None,
+    strategy: str = "stable",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One-shot neighborhood aggregation ``[n, k] -> [n, k]``.
+
+    ``degree`` (required for ``op="mean"``) is the per-node in-neighbor
+    count, e.g. :func:`repro.graph.graph.degrees` of the same adjacency.
+    For repeated calls over a resident graph prefer :func:`make_aggregator`
+    (or a serving :class:`~repro.serving.registry.MatrixPlan`), which
+    stage the tiles once.
+    """
+    from repro.kernels import ops
+
+    if op not in AGGREGATIONS:
+        raise ValueError(f"unknown aggregation {op!r} (expected one of {AGGREGATIONS})")
+    combine = "max" if op == "max" else "sum"
+    y = ops.hbp_spmm(tiles, x, strategy=strategy, combine=combine, interpret=interpret)
+    if op == "mean":
+        if degree is None:
+            raise ValueError("op='mean' needs the degree vector (degrees(adj))")
+        y = y / _mean_divisor(degree, tiles.shape[0])
+    return y
+
+
+def make_aggregator(
+    adj: CSRMatrix | HBPTiles,
+    *,
+    op: str = "sum",
+    degree=None,
+    cfg=None,
+    strategy: str = "stable",
+    interpret: bool | None = None,
+) -> Callable[[jax.Array], jax.Array]:
+    """Build a traceable aggregation closure over a device-resident graph.
+
+    ``adj`` may be the CSR adjacency (tiles are built here, with the
+    nnz-profile-tuned geometry unless ``cfg`` pins one) or prebuilt
+    :class:`HBPTiles`.  For ``op="mean"`` the degree vector defaults to
+    the structural in-degree of the CSR input (must be passed explicitly
+    for tiles).  The returned closure holds only jnp arrays — safe to
+    close over in a jitted GNN forward.
+    """
+    from repro.kernels import ops
+
+    if op not in AGGREGATIONS:
+        raise ValueError(f"unknown aggregation {op!r} (expected one of {AGGREGATIONS})")
+    if isinstance(adj, CSRMatrix):
+        if op == "mean" and degree is None:
+            degree = degrees(adj)
+        tiles = build_tiles(adj, cfg or tuned_partition_config(adj))
+    else:
+        tiles = adj
+        if op == "mean" and degree is None:
+            raise ValueError("op='mean' over prebuilt tiles needs degree=")
+    dt = ops.device_tiles(tiles)  # staged once; every call reuses it
+    meta = dict(
+        n_rowgroups=tiles.n_rowgroups,
+        n_rows=tiles.shape[0],
+        col_block=tiles.cfg.col_block,
+        strategy=strategy,
+        interpret=interpret,
+        combine="max" if op == "max" else "sum",
+    )
+    div: Optional[jax.Array] = (
+        _mean_divisor(np.asarray(degree), tiles.shape[0]) if op == "mean" else None
+    )
+
+    def agg(x: jax.Array) -> jax.Array:
+        y = ops.hbp_spmm(dt, x, **meta)
+        return y / div if div is not None else y
+
+    return agg
+
+
+def plan_aggregator(plan, *, op: str = "sum", bucketed: bool = True) -> Callable:
+    """Aggregator over a serving :class:`~repro.serving.registry.MatrixPlan`.
+
+    The served path for resident graphs: admit the (normalized) adjacency
+    to a :class:`~repro.serving.registry.MatrixRegistry` once — content
+    hashing and the autotune cache make re-admission free — and every GNN
+    layer call reuses its device tiles and autotuned geometry.  ``op``
+    follows :data:`AGGREGATIONS`; mean uses the in-degree the plan
+    captured at admission.
+    """
+    if op not in AGGREGATIONS:
+        raise ValueError(f"unknown aggregation {op!r} (expected one of {AGGREGATIONS})")
+    return lambda x: plan.aggregate(x, op=op, bucketed=bucketed)

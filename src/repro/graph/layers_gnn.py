@@ -1,0 +1,126 @@
+"""GCN and GraphSAGE forward passes over HBP aggregation.
+
+Layers are pure functions of (aggregator, params, features): the
+aggregator is any ``[n, k] -> [n, k]`` closure from
+:func:`repro.graph.aggregate.make_aggregator` (or a serving plan's
+``aggregate``), params are plain pytrees of jnp arrays, and the whole
+forward jit-compiles end to end — the sparse aggregation launches and the
+dense feature transforms fuse into one traced program.
+
+* **GCN** (Kipf & Welling): ``H' = act(Â (H W) + b)`` with
+  Â = D^-1/2 (A + I) D^-1/2 — build the aggregator over
+  ``normalize_adjacency(add_self_loops(A), "sym")`` with ``op="sum"``.
+  The dense transform runs *before* the sparse aggregation, so the SpMM
+  runs at the layer's output width (usually the narrower side).
+
+* **GraphSAGE** (Hamilton et al.): ``h' = act(x W_self + agg(x) W_neigh
+  + b)`` with a mean or max neighbor aggregator over the *raw* (no
+  self-loop) adjacency — max exercises the kernel's max-monoid combine.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "DenseParams",
+    "SageParams",
+    "init_gcn",
+    "init_sage",
+    "gcn_layer",
+    "gcn_forward",
+    "sage_layer",
+    "sage_forward",
+]
+
+Aggregator = Callable[[jax.Array], jax.Array]
+
+
+class DenseParams(NamedTuple):
+    """One GCN layer: feature transform W [in, out] and bias b [out]."""
+
+    W: jax.Array
+    b: jax.Array
+
+
+class SageParams(NamedTuple):
+    """One GraphSAGE layer: self and neighbor transforms plus bias."""
+
+    W_self: jax.Array  # [in, out]
+    W_neigh: jax.Array  # [in, out]
+    b: jax.Array  # [out]
+
+
+def _glorot(key, fan_in: int, fan_out: int) -> jax.Array:
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+
+
+def init_gcn(key, dims: Sequence[int]) -> List[DenseParams]:
+    """Glorot-initialized GCN stack: dims = [in, hidden..., out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return [
+        DenseParams(W=_glorot(k, d_in, d_out), b=jnp.zeros((d_out,), jnp.float32))
+        for k, d_in, d_out in zip(keys, dims[:-1], dims[1:])
+    ]
+
+
+def init_sage(key, dims: Sequence[int]) -> List[SageParams]:
+    """Glorot-initialized GraphSAGE stack: dims = [in, hidden..., out]."""
+    keys = jax.random.split(key, 2 * (len(dims) - 1))
+    return [
+        SageParams(
+            W_self=_glorot(keys[2 * i], d_in, d_out),
+            W_neigh=_glorot(keys[2 * i + 1], d_in, d_out),
+            b=jnp.zeros((d_out,), jnp.float32),
+        )
+        for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:]))
+    ]
+
+
+def gcn_layer(
+    agg: Aggregator, p: DenseParams, x: jax.Array, activation=jax.nn.relu
+) -> jax.Array:
+    """act(Â (x W) + b); pass ``activation=None`` for the logits layer."""
+    h = agg(x @ p.W) + p.b
+    return activation(h) if activation is not None else h
+
+
+def gcn_forward(
+    agg: Aggregator,
+    params: Sequence[DenseParams],
+    x: jax.Array,
+    *,
+    activation=jax.nn.relu,
+) -> jax.Array:
+    """Full GCN forward: activation between layers, raw logits out."""
+    for p in params[:-1]:
+        x = gcn_layer(agg, p, x, activation)
+    return gcn_layer(agg, params[-1], x, activation=None)
+
+
+def sage_layer(
+    agg: Aggregator, p: SageParams, x: jax.Array, activation=jax.nn.relu
+) -> jax.Array:
+    """act(x W_self + agg(x) W_neigh + b).
+
+    ``agg`` supplies the aggregation semantics (mean or max, with the
+    kernel's monoid underneath); the layer itself is aggregation-agnostic.
+    """
+    h = x @ p.W_self + agg(x) @ p.W_neigh + p.b
+    return activation(h) if activation is not None else h
+
+
+def sage_forward(
+    agg: Aggregator,
+    params: Sequence[SageParams],
+    x: jax.Array,
+    *,
+    activation=jax.nn.relu,
+) -> jax.Array:
+    """Full GraphSAGE forward: activation between layers, raw logits out."""
+    for p in params[:-1]:
+        x = sage_layer(agg, p, x, activation)
+    return sage_layer(agg, params[-1], x, activation=None)

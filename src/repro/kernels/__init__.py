@@ -4,6 +4,7 @@
 from . import ops, ref
 from .ops import (
     K_BUCKETS,
+    LANE_TILE,
     DeviceTiles,
     bucket_k,
     device_tiles,
@@ -22,4 +23,5 @@ __all__ = [
     "hbp_spmm_bucketed",
     "bucket_k",
     "K_BUCKETS",
+    "LANE_TILE",
 ]

@@ -49,6 +49,8 @@ __all__ = [
     "hbp_spmv_partials",
     "hbp_spmm_fused",
     "hbp_spmm_partials",
+    "hbp_spmm_fused_max",
+    "hbp_spmm_partials_max",
 ]
 
 
@@ -152,6 +154,104 @@ def hbp_spmm_fused(
         out_shape=jax.ShapeDtypeStruct((n_rowgroups, group, k), jnp.float32),
         interpret=interpret,
     )(rowgroup, colblock, first, data, cols, x_blocked)
+
+
+def _fused_spmm_max_kernel(rowgroup_ref, colblock_ref, first_ref, data_ref, cols_ref, x_ref, y_ref):
+    """Max-monoid fused combine: y[rowgroup[t]] = max(y, tile's lane max).
+
+    Padded slots (stored value 0) are masked to -inf — the max identity —
+    instead of contributing 0; empty output rows therefore come back -inf
+    for the host wrapper to zero (``ops._hbp_spmm_device``)."""
+    t = pl.program_id(0)
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        y_ref[...] = jnp.full_like(y_ref, -jnp.inf)
+
+    seg = x_ref[0]  # [col_block, k]
+    gathered = jnp.take(seg, cols_ref[0], axis=0)  # [group, lane, k]
+    d = data_ref[0][..., None]  # [group, lane, 1]
+    masked = jnp.where(d != 0, d * gathered, -jnp.inf)
+    y_ref[0] = jnp.maximum(y_ref[0], jnp.max(masked, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("n_rowgroups", "interpret"))
+def hbp_spmm_fused_max(
+    rowgroup: jax.Array,  # i32[T]
+    colblock: jax.Array,  # i32[T]
+    first: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block, k]
+    *,
+    n_rowgroups: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused-combine HBP SpMM under the max monoid (GNN max-aggregation).
+
+    Identical tile stream and revisit pattern to :func:`hbp_spmm_fused`;
+    the accumulation is ``maximum`` with identity ``-inf`` instead of
+    ``+`` with identity 0.  Returns hashed-order [n_rowgroups, group, k]
+    with ``-inf`` in rows that saw no live entry.
+    """
+    T, group, lane = data.shape
+    col_block, k = x_blocked.shape[1], x_blocked.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, col_block, k), lambda t, rg, cb, fs: (cb[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, k), lambda t, rg, cb, fs: (rg[t], 0, 0)),
+    )
+    return pl.pallas_call(
+        _fused_spmm_max_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rowgroups, group, k), jnp.float32),
+        interpret=interpret,
+    )(rowgroup, colblock, first, data, cols, x_blocked)
+
+
+def _partials_spmm_max_kernel(colblock_ref, data_ref, cols_ref, x_ref, y_ref):
+    """Max-monoid partials: one tile emits its masked [group, k] lane max."""
+    seg = x_ref[0]
+    gathered = jnp.take(seg, cols_ref[0], axis=0)  # [group, lane, k]
+    d = data_ref[0][..., None]
+    masked = jnp.where(d != 0, d * gathered, -jnp.inf)
+    y_ref[0] = jnp.max(masked, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hbp_spmm_partials_max(
+    colblock: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block, k]
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """SpMM part only under the max monoid: per-tile partial blocks
+    [T, group, k]; the combine part reduces them with ``segment_max``."""
+    T, group, lane = data.shape
+    col_block, k = x_blocked.shape[1], x_blocked.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
+            pl.BlockSpec((1, col_block, k), lambda t, cb: (cb[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, k), lambda t, cb: (t, 0, 0)),
+    )
+    return pl.pallas_call(
+        _partials_spmm_max_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, group, k), jnp.float32),
+        interpret=interpret,
+    )(colblock, data, cols, x_blocked)
 
 
 def _partials_kernel(colblock_ref, data_ref, cols_ref, x_ref, y_ref):

@@ -27,6 +27,7 @@ __all__ = [
     "hbp_spmm_bucketed",
     "bucket_k",
     "K_BUCKETS",
+    "LANE_TILE",
     "blocked_vector",
     "blocked_matrix",
 ]
@@ -34,8 +35,17 @@ __all__ = [
 # RHS-width buckets of the k-padded SpMM entry.  ``_hbp_spmm_device`` is
 # jitted with k baked into the trace, so an unconstrained request mix would
 # compile one kernel per distinct k; padding to the next bucket bounds the
-# compile count at len(K_BUCKETS) per matrix geometry.
-K_BUCKETS = (1, 2, 4, 8, 16)
+# compile count at len(K_BUCKETS) per matrix geometry.  The top bucket is
+# one full lane tile (128): beyond it ``bucket_k`` rounds up to multiples
+# of 128, each served as whole LANE_TILE-wide chunks of the lane-tiled k
+# loop — so GNN feature widths (256, 512, ...) add at most one partially
+# padded chunk, never an unbounded compile set.
+K_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+# Widest RHS block a single kernel launch carries: k sits in the lane
+# dimension of the x segment and the output tile, and one VREG holds 128
+# lanes.  ``_hbp_spmm_device`` tiles wider k over sequential launches.
+LANE_TILE = 128
 
 
 class DeviceTiles(NamedTuple):
@@ -134,8 +144,69 @@ def _hbp_spmv_device(
     return _ref.unpermute(y_hashed, dt.perm, n_rows)
 
 
+def _spmm_hashed_chunk(
+    dt: DeviceTiles,
+    x_blocked: jax.Array,  # f32[n_blocks, col_block, k<=LANE_TILE]
+    *,
+    n_rowgroups: int,
+    strategy: str,
+    combine: str,
+    interpret: bool,
+) -> jax.Array:
+    """One <=LANE_TILE-wide SpMM launch, output in hashed row order.
+
+    Under ``combine="max"`` empty rows carry the monoid identity ``-inf``
+    here; the caller maps it to 0 once, after all chunks are assembled."""
+    if combine == "max":
+        if strategy == "fused":
+            y = _k.hbp_spmm_fused_max(
+                dt.rowgroup, dt.colblock, dt.first, dt.data, dt.cols, x_blocked,
+                n_rowgroups=n_rowgroups, interpret=interpret,
+            )
+            # never-visited output blocks are undefined memory, not -inf
+            return jnp.where(dt.visited[..., None] > 0, y, -jnp.inf)
+        if strategy == "partials":
+            contrib = _k.hbp_spmm_partials_max(
+                dt.colblock, dt.data, dt.cols, x_blocked, interpret=interpret
+            )
+            return jax.ops.segment_max(contrib, dt.rowgroup, num_segments=n_rowgroups)
+        if strategy in ("reference", "stable"):
+            # maximum is exactly associative/commutative: the unrolled lane
+            # chain is reference, stable and batch-width-invariant at once
+            return _ref.hbp_spmm_hashed_max(
+                dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
+                n_rowgroups=n_rowgroups,
+            )
+        raise ValueError(f"unknown strategy {strategy!r}")
+    if combine != "sum":
+        raise ValueError(f"unknown combine {combine!r} (expected 'sum' or 'max')")
+    if strategy == "fused":
+        y = _k.hbp_spmm_fused(
+            dt.rowgroup, dt.colblock, dt.first, dt.data, dt.cols, x_blocked,
+            n_rowgroups=n_rowgroups, interpret=interpret,
+        )
+        return jnp.where(dt.visited[..., None] > 0, y, 0.0)
+    if strategy == "partials":
+        contrib = _k.hbp_spmm_partials(
+            dt.colblock, dt.data, dt.cols, x_blocked, interpret=interpret
+        )
+        return jax.ops.segment_sum(contrib, dt.rowgroup, num_segments=n_rowgroups)
+    if strategy == "reference":
+        return _ref.hbp_spmm_hashed_ref(
+            dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
+            n_rowgroups=n_rowgroups,
+        )
+    if strategy == "stable":
+        return _ref.hbp_spmm_hashed_stable(
+            dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
+            n_rowgroups=n_rowgroups,
+        )
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
 @functools.partial(
-    jax.jit, static_argnames=("n_rowgroups", "n_rows", "strategy", "interpret")
+    jax.jit,
+    static_argnames=("n_rowgroups", "n_rows", "strategy", "interpret", "combine"),
 )
 def _hbp_spmm_device(
     dt: DeviceTiles,
@@ -145,33 +216,46 @@ def _hbp_spmm_device(
     n_rows: int,
     strategy: str,
     interpret: bool,
+    combine: str = "sum",
 ) -> jax.Array:
+    """Hashed SpMM + unpermute, lane-tiling the RHS width.
+
+    ``k`` lives in the lane dimension of the kernels, so a single launch
+    carries at most :data:`LANE_TILE` RHS columns.  Wider feature blocks
+    (GNN aggregation at k = 256, 512, ...) are served by a **lane-tiled k
+    loop**: the RHS is split into LANE_TILE-wide chunks, each chunk runs
+    the full tile stream through the selected strategy, and the hashed
+    outputs are concatenated before the single unpermute.  The tile stream
+    is re-read once per chunk — ceil(k / 128) passes instead of the k
+    passes of SpMV-per-column — and every chunk stays on the fast
+    (<=128-lane) path instead of spilling the VPU's lane dimension.
+
+    Chunking never changes results: each strategy's lane reduction is
+    per-column (elementwise across k), so a column's value — and for
+    ``"stable"`` its exact bit pattern — is independent of which chunk or
+    launch width carried it.
+    """
     k = x_blocked.shape[-1]
-    if dt.data.shape[0] == 0:  # empty matrix: no tiles, Y == 0
+    if dt.data.shape[0] == 0:  # empty matrix: no tiles, Y == identity-mapped 0
         return jnp.zeros((n_rows, k), jnp.float32)
-    if strategy == "fused":
-        y_hashed = _k.hbp_spmm_fused(
-            dt.rowgroup, dt.colblock, dt.first, dt.data, dt.cols, x_blocked,
-            n_rowgroups=n_rowgroups, interpret=interpret,
-        )
-        y_hashed = jnp.where(dt.visited[..., None] > 0, y_hashed, 0.0)
-    elif strategy == "partials":
-        contrib = _k.hbp_spmm_partials(
-            dt.colblock, dt.data, dt.cols, x_blocked, interpret=interpret
-        )
-        y_hashed = jax.ops.segment_sum(contrib, dt.rowgroup, num_segments=n_rowgroups)
-    elif strategy == "reference":
-        y_hashed = _ref.hbp_spmm_hashed_ref(
-            dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
-            n_rowgroups=n_rowgroups,
-        )
-    elif strategy == "stable":
-        y_hashed = _ref.hbp_spmm_hashed_stable(
-            dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
-            n_rowgroups=n_rowgroups,
+    if k <= LANE_TILE:
+        y_hashed = _spmm_hashed_chunk(
+            dt, x_blocked, n_rowgroups=n_rowgroups, strategy=strategy,
+            combine=combine, interpret=interpret,
         )
     else:
-        raise ValueError(f"unknown strategy {strategy!r}")
+        chunks = [
+            _spmm_hashed_chunk(
+                dt, x_blocked[..., lo : lo + LANE_TILE], n_rowgroups=n_rowgroups,
+                strategy=strategy, combine=combine, interpret=interpret,
+            )
+            for lo in range(0, k, LANE_TILE)
+        ]
+        y_hashed = jnp.concatenate(chunks, axis=-1)
+    if combine == "max":
+        # rows with no live entry hold the monoid identity; outputs are 0
+        # there (the aggregation convention for isolated graph nodes)
+        y_hashed = jnp.where(jnp.isneginf(y_hashed), 0.0, y_hashed)
     return _ref.unpermute(y_hashed, dt.perm, n_rows)
 
 
@@ -216,9 +300,21 @@ def hbp_spmv(
 
 
 def bucket_k(k: int, buckets: tuple = K_BUCKETS) -> int:
-    """Smallest bucket width >= k (multiples of the top bucket beyond it)."""
+    """Smallest bucket width >= k; beyond the top bucket, the next
+    *multiple* of it.
+
+    A request is never clamped down to the top bucket: k = 300 over the
+    default buckets pads up to 384 (three 128-wide lane tiles), and
+    ``hbp_spmm_bucketed`` slices the real columns back out — the lane-tiled
+    k loop in ``_hbp_spmm_device`` serves each 128-wide chunk on the fast
+    path.  Rounding to top-bucket multiples keeps the compile count
+    bounded (one trace per multiple actually seen) while supporting
+    arbitrary feature widths.
+    """
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
+    if not buckets:
+        raise ValueError("buckets must be non-empty")
     for b in buckets:
         if k <= b:
             return int(b)
@@ -243,6 +339,10 @@ def hbp_spmm_bucketed(
     may differ by ~1 ulp when the bucket changes the launch width.  This
     is the entry the serving micro-batcher routes coalesced request
     blocks through.
+
+    Zero-padding is also safe under ``combine="max"``: padded columns are
+    sliced off before returning, and a padded *column* cannot influence a
+    real one (the lane reduction never mixes k slots).
     """
     x = jnp.asarray(x, jnp.float32)
     k = x.shape[1]
@@ -257,15 +357,24 @@ def hbp_spmm(
     x: jax.Array,  # [n_cols, k]
     *,
     strategy: Literal["fused", "partials", "reference", "stable"] = "fused",
+    combine: Literal["sum", "max"] = "sum",
     interpret: bool | None = None,
     n_rowgroups: int | None = None,
     n_rows: int | None = None,
     col_block: int | None = None,
 ) -> jax.Array:
-    """HBP multi-RHS SpMM: ``Y = A @ X`` with A in HBP tile format.
+    """HBP multi-RHS SpMM: ``Y = A (x) X`` with A in HBP tile format.
 
-    One kernel launch serves all ``k`` columns of X — the tile stream is
-    read once instead of ``k`` times (the SpMV-per-column fallback)."""
+    One kernel launch serves up to :data:`LANE_TILE` columns of X; wider
+    blocks tile over sequential launches (the lane-tiled k loop) — the
+    tile stream is read ceil(k/128) times instead of ``k`` times (the
+    SpMV-per-column fallback).
+
+    ``combine`` selects the reduction monoid: ``"sum"`` is the standard
+    SpMM; ``"max"`` computes ``Y[i, c] = max_j A[i, j] * X[j, c]`` over
+    A's *stored* entries (rows with none yield 0) — the max-aggregation
+    semiring of GNN message passing (:mod:`repro.graph`).
+    """
     x = jnp.asarray(x, jnp.float32)
     dt, (n_rowgroups, n_rows, col_block) = _resolve(tiles, x, n_rowgroups, n_rows, col_block)
     if interpret is None:
@@ -278,4 +387,5 @@ def hbp_spmm(
         n_rows=n_rows,
         strategy=strategy,
         interpret=interpret,
+        combine=combine,
     )

@@ -18,6 +18,8 @@ __all__ = [
     "hbp_spmm_hashed_ref",
     "tile_contrib_spmm_stable",
     "hbp_spmm_hashed_stable",
+    "tile_contrib_spmm_max",
+    "hbp_spmm_hashed_max",
     "unpermute",
 ]
 
@@ -125,6 +127,63 @@ def hbp_spmm_hashed_stable(
     [n_rowgroups, group, k]."""
     contrib = tile_contrib_spmm_stable(colblock, data, cols, x_blocked)
     return jax.ops.segment_sum(contrib, rowgroup, num_segments=n_rowgroups)
+
+
+def tile_contrib_spmm_max(
+    colblock: jax.Array,  # i32[T]
+    data: jax.Array,  # f32[T, group, lane]
+    cols: jax.Array,  # i32[T, group, lane]
+    x_blocked: jax.Array,  # f32[n_col_blocks, col_block, k]
+) -> jax.Array:
+    """Max-monoid SpMM contributions [T, group, k]: per-tile
+    ``max_j(a_ij * x_jk)`` over the tile's lanes.
+
+    The max semiring backs GNN max-aggregation (``repro.graph``): the
+    combine is ``maximum`` instead of ``+``, whose identity is ``-inf`` —
+    so padded tile slots must be *masked out*, not multiplied through
+    (``0 * x = 0`` would beat every all-negative row).  A slot is live iff
+    its stored value is nonzero; explicitly stored zeros are treated as
+    absent entries, consistent with sparse semantics where only the stored
+    pattern participates.  Rows with no live slots come out ``-inf`` here;
+    the caller maps the identity back to 0 *after* the row-group combine
+    (see ``ops._hbp_spmm_device``) so it never leaks into outputs.
+
+    Like the stable sum path, the lane reduction is an unrolled chain —
+    ``maximum`` is exactly associative and commutative on floats, so this
+    one form serves as reference, stable, and oracle at once (bit-exact
+    under any batch width by construction).
+    """
+    n_cb, col_block, k = x_blocked.shape
+    x_flat = x_blocked.reshape(n_cb * col_block, k)
+    base = colblock[:, None] * col_block  # [T, 1] offset of each tile's segment
+    neg = jnp.float32(-jnp.inf)
+
+    def lane_term(lane):
+        d = data[:, :, lane, None]  # [T, group, 1]
+        prod = d * x_flat[base + cols[:, :, lane]]
+        return jnp.where(d != 0, prod, neg)
+
+    acc = lane_term(0)
+    for lane in range(1, data.shape[2]):
+        acc = jnp.maximum(acc, lane_term(lane))
+    return acc
+
+
+def hbp_spmm_hashed_max(
+    rowgroup: jax.Array,
+    colblock: jax.Array,
+    data: jax.Array,
+    cols: jax.Array,
+    x_blocked: jax.Array,
+    *,
+    n_rowgroups: int,
+) -> jax.Array:
+    """Max-monoid SpMM + combine, hashed row order [n_rowgroups, group, k].
+
+    Row groups with no tiles (and all-padding slots) are ``-inf`` — the
+    monoid identity, for the caller to mask."""
+    contrib = tile_contrib_spmm_max(colblock, data, cols, x_blocked)
+    return jax.ops.segment_max(contrib, rowgroup, num_segments=n_rowgroups)
 
 
 def unpermute(y_hashed: jax.Array, perm: jax.Array, n_rows: int) -> jax.Array:

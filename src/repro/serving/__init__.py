@@ -5,8 +5,11 @@
 from .autotune import (
     AutotuneCache,
     AutotuneResult,
+    Probe,
     autotune_partition,
+    cg_probe,
     matrix_hash,
+    spmm_probe,
 )
 from .batcher import MicroBatcher, SpMVRequest
 from .engine import ServingEngine, Ticket
@@ -15,6 +18,9 @@ from .registry import MatrixPlan, MatrixRegistry
 __all__ = [
     "AutotuneCache",
     "AutotuneResult",
+    "Probe",
+    "spmm_probe",
+    "cg_probe",
     "autotune_partition",
     "matrix_hash",
     "MicroBatcher",

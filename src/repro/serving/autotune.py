@@ -22,7 +22,7 @@ import json
 import os
 import time
 from pathlib import Path
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -34,6 +34,9 @@ __all__ = [
     "matrix_hash",
     "AutotuneCache",
     "AutotuneResult",
+    "Probe",
+    "spmm_probe",
+    "cg_probe",
     "autotune_partition",
     "DEFAULT_CACHE_DIR",
 ]
@@ -118,14 +121,90 @@ class AutotuneCache:
 
 
 def _space_fingerprint(
-    candidates: Sequence[PartitionConfig], k: int, strategy: str
+    candidates: Sequence[PartitionConfig], k: int, strategy: str, probe: "Probe"
 ) -> str:
-    """Content key of a measured search: candidate set, probe width, and
-    the strategy whose cost model was timed.  Stored with searched cache
-    entries so a search over a narrow space (or a different kernel path)
-    does not satisfy later admissions searching a different one."""
+    """Content key of a measured search: candidate set plus the objective
+    that ranked it.  Stored with searched cache entries so a search over a
+    narrow space, a different kernel path, or a different objective (e.g.
+    CG time-to-tolerance vs raw SpMM time) does not satisfy later
+    admissions searching a different one.
+
+    An SpMM probe is fingerprinted by ITS OWN (k, strategy) — not the
+    ``autotune_partition`` call's — so e.g. a spmm_probe(k=128) search
+    never satisfies a default k=8 admission; when the probe is the
+    default one built from the call's arguments the two coincide, which
+    keeps the historical ``(geoms, k, strategy)`` fingerprint and existing
+    caches warm."""
     geoms = sorted((c.row_block, c.col_block, c.group, c.lane) for c in candidates)
-    return hashlib.sha256(repr((geoms, k, strategy)).encode()).hexdigest()[:16]
+    if probe.kind == "spmm" and len(probe.params) == 2:
+        key = (geoms, *probe.params)
+    else:
+        key = (geoms, k, strategy, probe.kind, probe.params)
+    return hashlib.sha256(repr(key).encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class Probe:
+    """A measured-search objective: what one candidate geometry costs.
+
+    ``measure(csr, cfg, repeats)`` returns the objective in microseconds
+    (lower is better); ``kind`` names the objective and — together with
+    ``params``, the objective's own parameters — enters the cache
+    fingerprint, so entries tuned under one objective never satisfy
+    admissions tuning under another.
+    """
+
+    kind: str
+    measure: Callable[[CSRMatrix, PartitionConfig, int], float]
+    params: tuple = ()
+
+    def __call__(self, csr: CSRMatrix, cfg: PartitionConfig, repeats: int) -> float:
+        return self.measure(csr, cfg, repeats)
+
+
+def spmm_probe(k: int = 8, strategy: str = "stable") -> Probe:
+    """The default serving objective: one steady-state k-wide SpMM launch."""
+    return Probe(
+        kind="spmm",
+        measure=lambda csr, cfg, repeats: _measure_spmm_us(
+            csr, cfg, k, repeats, strategy
+        ),
+        params=(k, strategy),
+    )
+
+
+def cg_probe(
+    iters: int = 10, k: int = 1, strategy: str = "stable", seed: int = 0
+) -> Probe:
+    """Solver-objective probe: wall time of ``iters`` CG iterations.
+
+    Ranks candidate geometries by what an iterative-solver workload
+    actually pays — time to (a proxy for) tolerance rather than raw
+    multiply time, folding in the per-iteration vector work and, for
+    blocked RHS (``k > 1``), the SpMM amortization the solver sees.
+    ``tol=0`` pins the iteration count so every candidate runs exactly
+    ``iters`` steps of the same Krylov recurrence.
+    """
+
+    def measure(csr: CSRMatrix, cfg: PartitionConfig, repeats: int) -> float:
+        from repro.solvers import cg
+        from repro.solvers.operator import aslinearoperator
+
+        tiles = build_tiles(csr, cfg)
+        op = aslinearoperator(tiles, strategy=strategy)
+        rng = np.random.default_rng(seed)
+        shape = (csr.n_rows,) if k == 1 else (csr.n_rows, k)
+        b = rng.standard_normal(shape).astype(np.float32)
+        jax_block = lambda r: r.x.block_until_ready()
+        jax_block(cg(op, b, tol=0.0, maxiter=iters))  # compile outside the clock
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax_block(cg(op, b, tol=0.0, maxiter=iters))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts) * 1e6)
+
+    return Probe(kind=f"cg{iters}x{k}_{strategy}", measure=measure)
 
 
 def _measure_spmm_us(
@@ -169,6 +248,7 @@ def autotune_partition(
     k: int = 8,
     repeats: int = 3,
     strategy: str = "stable",
+    probe: Optional[Probe] = None,
 ) -> AutotuneResult:
     """Pick a :class:`PartitionConfig` for ``csr``, cheapest source first.
 
@@ -187,16 +267,25 @@ def autotune_partition(
     search can permanently pin a matrix that a full-space admission would
     have tuned better; the mismatched admission simply re-searches and
     overwrites.
+
+    ``probe`` swaps the search objective: the default ranks candidates by
+    one steady-state ``k``-wide SpMM launch under ``strategy``
+    (:func:`spmm_probe`); a solver workload can rank by time-to-tolerance
+    instead (:func:`cg_probe`, ``iters`` fixed CG steps).  The probe kind
+    is part of the cache fingerprint, so entries tuned under different
+    objectives never satisfy each other.
     """
     cache = cache or AutotuneCache()
     key = key or matrix_hash(csr)
+    if probe is None:
+        probe = spmm_probe(k=k, strategy=strategy)
     if search:
         # materialize once: generators must survive both the fingerprint
         # and the measurement loop
         candidates = (
             enumerate_configs(csr.shape) if candidates is None else list(candidates)
         )
-    space = _space_fingerprint(candidates, k, strategy) if search else None
+    space = _space_fingerprint(candidates, k, strategy, probe) if search else None
     entry = cache.get(key)
     if entry is not None:
         satisfied = (
@@ -220,12 +309,15 @@ def autotune_partition(
 
     best_cfg, best_us = None, float("inf")
     for cand in candidates:
-        us = _measure_spmm_us(csr, cand, k, repeats, strategy)
+        us = probe(csr, cand, repeats)
         if us < best_us:
             best_cfg, best_us = cand, us
     if best_cfg is None:  # empty candidate list: fall back to the heuristic
         return autotune_partition(csr, key=key, cache=cache, search=False)
-    cache.put(key, best_cfg, searched=True, objective_us=best_us, space=space)
+    cache.put(
+        key, best_cfg, searched=True, objective_us=best_us, space=space,
+        probe=probe.kind,
+    )
     return AutotuneResult(
         cfg=best_cfg,
         cache_hit=False,

@@ -46,12 +46,15 @@ class MatrixPlan:
     tiles: HBPTiles  # host copy (rebuilds, debugging)
     device: object  # DeviceTiles pytree, staged once
     diag: np.ndarray  # main diagonal, host-resident at tile-build time
+    row_nnz: np.ndarray  # per-row stored-entry count (graph in-degree)
     preprocess_s: float  # autotune + tile build + device staging
     autotune_cache_hit: bool
     autotune_searched: bool
     admissions: int = 1  # admit() calls that resolved to this plan
     strategy: str = "fused"
     interpret: Optional[bool] = None
+    # device-staged clamped in-degree [n, 1], built on first mean aggregate
+    _mean_div: object = dataclasses.field(default=None, repr=False, compare=False)
 
     def _meta(self) -> dict:
         return dict(
@@ -68,17 +71,42 @@ class MatrixPlan:
 
         return ops.hbp_spmv(self.device, x, **self._meta())
 
-    def matmat(self, x, *, bucketed: bool = True, buckets=None):
-        """``A @ X`` for an ``[n, k]`` block; ``bucketed`` pads k to the
+    def matmat(self, x, *, bucketed: bool = True, buckets=None, combine: str = "sum"):
+        """``A (x) X`` for an ``[n, k]`` block; ``bucketed`` pads k to the
         serving buckets (``buckets`` overrides the default set) so the
-        compile count stays bounded."""
+        compile count stays bounded.  ``combine`` selects the reduction
+        monoid ("sum" | "max") — feature widths beyond the top bucket
+        lane-tile inside the kernel wrapper."""
         from repro.kernels import ops
 
         if not bucketed:
-            return ops.hbp_spmm(self.device, x, **self._meta())
+            return ops.hbp_spmm(self.device, x, combine=combine, **self._meta())
         if buckets is None:
             buckets = ops.K_BUCKETS
-        return ops.hbp_spmm_bucketed(self.device, x, buckets=buckets, **self._meta())
+        return ops.hbp_spmm_bucketed(
+            self.device, x, buckets=buckets, combine=combine, **self._meta()
+        )
+
+    def aggregate(self, x, *, op: str = "sum", bucketed: bool = True):
+        """Neighborhood aggregation over the resident plan: the registered
+        matrix read as a graph adjacency (rows aggregate their stored
+        neighbors).  ``op`` is "sum", "mean" (sum / in-degree, captured at
+        admission) or "max" (the max-monoid kernel path); repeated GNN
+        layer calls all reuse the device tiles and autotuned geometry.
+        """
+        import jax.numpy as jnp
+
+        if op == "sum":
+            return self.matmat(x, bucketed=bucketed)
+        if op == "mean":
+            if self._mean_div is None:  # staged once, like the tiles
+                self._mean_div = jnp.maximum(
+                    jnp.asarray(self.row_nnz, jnp.float32).reshape(-1, 1), 1.0
+                )
+            return self.matmat(x, bucketed=bucketed) / self._mean_div
+        if op == "max":
+            return self.matmat(x, bucketed=bucketed, combine="max")
+        raise ValueError(f"unknown aggregation {op!r} (sum | mean | max)")
 
     def operator(self):
         """The plan as a solver-ready :class:`LinearOperator`."""
@@ -115,6 +143,7 @@ class MatrixRegistry:
         autotune_k: int = 8,
         strategy: Optional[str] = None,
         interpret: Optional[bool] = None,
+        probe=None,
     ):
         if strategy is None:
             import jax
@@ -126,6 +155,7 @@ class MatrixRegistry:
         self.autotune_k = autotune_k
         self.strategy = strategy
         self.interpret = interpret
+        self.probe = probe  # None: steady-state SpMM time (spmm_probe)
         self._plans: Dict[str, MatrixPlan] = {}
         self._by_hash: Dict[str, str] = {}
 
@@ -174,12 +204,14 @@ class MatrixRegistry:
                 candidates=self.candidates,
                 k=self.autotune_k,
                 strategy=self.strategy,  # rank configs under the served path
+                probe=self.probe,  # e.g. cg_probe: rank by time-to-tolerance
             )
             cfg = tuned.cfg
             tune_hit, tune_searched = tuned.cache_hit, tuned.searched
         tiles = build_tiles(csr, cfg)
         device = ops.device_tiles(tiles)
         diag = csr.diagonal()
+        row_nnz = csr.row_nnz().astype(np.int64)
         preprocess_s = time.perf_counter() - t0
 
         name = name or f"m_{key[:12]}"
@@ -192,6 +224,7 @@ class MatrixRegistry:
             tiles=tiles,
             device=device,
             diag=diag,
+            row_nnz=row_nnz,
             preprocess_s=preprocess_s,
             autotune_cache_hit=tune_hit,
             autotune_searched=tune_searched,

@@ -9,7 +9,7 @@ from .cg import cg
 from .chebyshev import chebyshev, estimate_spectrum
 from .operator import LinearOperator, aslinearoperator
 from .power import pagerank, power_iteration, transition_matrix
-from .precond import jacobi
+from .precond import block_jacobi, hash_group_blocks, jacobi
 
 __all__ = [
     "SolveResult",
@@ -24,4 +24,6 @@ __all__ = [
     "pagerank",
     "transition_matrix",
     "jacobi",
+    "block_jacobi",
+    "hash_group_blocks",
 ]

@@ -17,8 +17,11 @@ from repro.core.tile import tuned_partition_config
 from repro.serving import (
     AutotuneCache,
     MatrixRegistry,
+    Probe,
     autotune_partition,
+    cg_probe,
     matrix_hash,
+    spmm_probe,
 )
 
 # tiny geometries keep each measured build/launch in the milliseconds
@@ -144,6 +147,113 @@ def test_empty_candidates_uses_heuristic(tmp_path, csr):
     )
     assert not res.searched
     assert res.cfg == tuned_partition_config(csr)
+
+
+# --- probe hook: solver-objective search -----------------------------------
+
+
+def test_cg_probe_searches_and_caches(tmp_path, csr):
+    """Time-to-tolerance ranking: a fixed-iteration CG run per candidate,
+    cached like any measured search."""
+    cache = AutotuneCache(tmp_path / "cache")
+    probe = cg_probe(iters=3)
+    res = autotune_partition(
+        csr, cache=cache, candidates=CANDIDATES, repeats=1, probe=probe
+    )
+    assert res.searched and res.evaluations == len(CANDIDATES)
+    assert res.objective_us is not None and res.objective_us > 0
+    again = autotune_partition(
+        csr, cache=cache, candidates=CANDIDATES, repeats=1, probe=probe
+    )
+    assert again.cache_hit and again.cfg == res.cfg
+
+
+def test_probe_kind_fingerprints_cache_entries(tmp_path, csr):
+    """Satellite acceptance: an entry searched under one objective must not
+    satisfy an admission searching under another — the probe kind is part
+    of the cache fingerprint."""
+    cache = AutotuneCache(tmp_path / "cache")
+    spmm_res = autotune_partition(csr, cache=cache, candidates=CANDIDATES, repeats=1)
+    assert spmm_res.searched
+    solver = autotune_partition(
+        csr, cache=cache, candidates=CANDIDATES, repeats=1, probe=cg_probe(iters=3)
+    )
+    assert solver.searched and not solver.cache_hit  # spmm entry did not satisfy
+    # the solver entry now owns the cache: solver callers hit, spmm re-search
+    assert autotune_partition(
+        csr, cache=cache, candidates=CANDIDATES, repeats=1, probe=cg_probe(iters=3)
+    ).cache_hit
+    assert autotune_partition(
+        csr, cache=cache, candidates=CANDIDATES, repeats=1
+    ).searched
+    # distinct solver objectives are distinct kinds too
+    assert cg_probe(iters=3).kind != cg_probe(iters=10).kind
+
+
+def test_default_probe_keeps_historical_fingerprint(tmp_path, csr):
+    """probe=None and probe=spmm_probe(...) with matching parameters are
+    the same search — pre-probe cache entries stay warm."""
+    cache = AutotuneCache(tmp_path / "cache")
+    autotune_partition(csr, cache=cache, candidates=CANDIDATES, repeats=1)
+    res = autotune_partition(
+        csr, cache=cache, candidates=CANDIDATES, repeats=1,
+        probe=spmm_probe(k=8, strategy="stable"),
+    )
+    assert res.cache_hit
+
+
+def test_spmm_probe_params_fingerprint_cache_entries(tmp_path, csr):
+    """An explicit spmm_probe with non-default k/strategy is a different
+    objective from the default admission — its entry must not satisfy (or
+    be satisfied by) a default-probe search."""
+    cache = AutotuneCache(tmp_path / "cache")
+    wide = autotune_partition(
+        csr, cache=cache, candidates=CANDIDATES, repeats=1,
+        probe=spmm_probe(k=16, strategy="reference"),
+    )
+    assert wide.searched
+    default = autotune_partition(csr, cache=cache, candidates=CANDIDATES, repeats=1)
+    assert default.searched and not default.cache_hit
+    # and the default entry now hits only for the default objective
+    assert autotune_partition(
+        csr, cache=cache, candidates=CANDIDATES, repeats=1
+    ).cache_hit
+    assert autotune_partition(
+        csr, cache=cache, candidates=CANDIDATES, repeats=1,
+        probe=spmm_probe(k=16, strategy="reference"),
+    ).searched
+
+
+def test_custom_probe_object(tmp_path, csr):
+    """Any (kind, measure) pair drives the search; the winner is whatever
+    the objective says."""
+    calls = []
+
+    def measure(csr_, cfg, repeats):
+        calls.append(cfg)
+        return 1.0 if cfg is CANDIDATES[1] else 100.0
+
+    res = autotune_partition(
+        csr, cache=AutotuneCache(tmp_path / "c"), candidates=CANDIDATES,
+        repeats=1, probe=Probe(kind="synthetic", measure=measure),
+    )
+    assert len(calls) == len(CANDIDATES)
+    assert res.cfg == CANDIDATES[1]
+
+
+def test_registry_passes_probe_through(tmp_path, csr):
+    reg = MatrixRegistry(
+        cache_dir=tmp_path / "cache", candidates=CANDIDATES,
+        probe=cg_probe(iters=2),
+    )
+    plan = reg.admit(csr, "A")
+    assert plan.autotune_searched
+    # fresh registry with the same probe hits the same entry
+    reg2 = MatrixRegistry(
+        cache_dir=tmp_path / "cache", candidates=CANDIDATES,
+        probe=cg_probe(iters=2),
+    )
+    assert reg2.admit(csr, "A").autotune_cache_hit
 
 
 # --- registry integration (the acceptance criterion) ----------------------

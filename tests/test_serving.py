@@ -39,9 +39,31 @@ def test_bucket_k():
     assert [ops.bucket_k(k) for k in (1, 2, 3, 4, 5, 8, 9, 16)] == [
         1, 2, 4, 4, 8, 8, 16, 16,
     ]
-    assert ops.bucket_k(17) == 32  # beyond the top bucket: multiples of it
+    assert ops.bucket_k(17) == 32 and ops.bucket_k(100) == 128  # in-bucket
     with pytest.raises(ValueError):
         ops.bucket_k(0)
+    with pytest.raises(ValueError):
+        ops.bucket_k(4, buckets=())
+
+
+def test_bucket_k_above_top_bucket_tiles_never_clamps():
+    """Regression: k beyond max(K_BUCKETS) must round UP to top-bucket
+    multiples (lane tiles), never clamp down to the top bucket."""
+    top = ops.K_BUCKETS[-1]
+    assert ops.bucket_k(top + 1) == 2 * top
+    assert ops.bucket_k(300) == -(-300 // top) * top
+    assert ops.bucket_k(4 * top) == 4 * top
+    # and the bucketed SpMM entry really serves such a width correctly
+    rng = np.random.default_rng(11)
+    dense = (rng.standard_normal((40, 50)) * (rng.random((40, 50)) < 0.2)).astype(
+        np.float32
+    )
+    tiles = build_tiles(csr_from_dense(dense), CFG)
+    k = top + 7
+    X = rng.standard_normal((50, k)).astype(np.float32)
+    Y = np.asarray(ops.hbp_spmm_bucketed(tiles, X, strategy="stable"))
+    assert Y.shape == (40, k)
+    np.testing.assert_allclose(Y, dense @ X, rtol=1e-4, atol=1e-4)
 
 
 def test_hbp_spmm_bucketed_matches_unpadded(rng):
@@ -225,7 +247,7 @@ def test_engine_rejects_bad_submissions(two_matrices, registry):
     with pytest.raises(ValueError, match="expects"):
         eng.submit("A", np.ones(3, np.float32))
     with pytest.raises(ValueError, match="k-bucket"):
-        ServingEngine(registry, max_batch=64)
+        ServingEngine(registry, max_batch=2 * ops.K_BUCKETS[-1])
 
 
 # --- registry -------------------------------------------------------------

@@ -131,6 +131,123 @@ def test_spmm_empty_matrix():
     assert Y.shape == (32, 3) and (Y == 0).all()
 
 
+# --- lane-tiled k loop: feature widths beyond one 128-lane tile -----------
+
+
+def _max_oracle(dense: np.ndarray, X: np.ndarray) -> np.ndarray:
+    """max_j(a_ij * x_jk) over stored entries; empty rows -> 0."""
+    out = np.zeros((dense.shape[0], X.shape[1]), np.float32)
+    for i in range(dense.shape[0]):
+        nz = np.nonzero(dense[i])[0]
+        if nz.size:
+            out[i] = (dense[i, nz, None] * X[nz]).max(axis=0)
+    return out
+
+
+@pytest.mark.parametrize("k", [130, 256])
+@pytest.mark.parametrize("strategy", ["fused", "partials", "reference", "stable"])
+def test_lane_tiled_wide_k_matches_dense(k, strategy, rng):
+    """k > LANE_TILE tiles over sequential <=128-lane chunks inside
+    _hbp_spmm_device instead of spilling the lane dimension."""
+    from repro.kernels.ops import LANE_TILE
+
+    assert k > LANE_TILE
+    dense = (rng.standard_normal((70, 90)) * (rng.random((70, 90)) < 0.12)).astype(
+        np.float32
+    )
+    tiles = build_tiles(
+        csr_from_dense(dense), PartitionConfig(row_block=32, col_block=64, group=8, lane=8)
+    )
+    X = rng.standard_normal((90, k)).astype(np.float32)
+    Y = np.asarray(hbp_spmm(tiles, X, strategy=strategy, interpret=True))
+    np.testing.assert_allclose(Y, dense @ X, rtol=1e-4, atol=1e-4)
+
+
+def test_stable_strategy_invariant_across_lane_tiles(rng):
+    """A column's bits must not depend on the launch width even when the
+    width crosses the LANE_TILE boundary — the serving guarantee extended
+    to GNN feature blocks."""
+    dense = (rng.standard_normal((60, 80)) * (rng.random((60, 80)) < 0.15)).astype(
+        np.float32
+    )
+    tiles = build_tiles(
+        csr_from_dense(dense), PartitionConfig(row_block=32, col_block=32, group=8, lane=8)
+    )
+    X = rng.standard_normal((80, 200)).astype(np.float32)
+    Y_wide = np.asarray(hbp_spmm(tiles, X, strategy="stable"))
+    for j in (0, 127, 128, 199):  # columns straddling the chunk boundary
+        yj = np.asarray(hbp_spmv(tiles, X[:, j], strategy="stable"))
+        assert np.array_equal(Y_wide[:, j], yj), f"column {j}"
+    Y_narrow = np.asarray(hbp_spmm(tiles, X[:, :130], strategy="stable"))
+    assert np.array_equal(Y_narrow, Y_wide[:, :130])
+
+
+# --- max-monoid combine (GNN max aggregation) ------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 5, 16, 256])
+@pytest.mark.parametrize("strategy", ["fused", "partials", "reference", "stable"])
+def test_hbp_spmm_max_matches_oracle(k, strategy, rng):
+    dense = (rng.standard_normal((60, 70)) * (rng.random((60, 70)) < 0.12)).astype(
+        np.float32
+    )
+    dense[7] = 0.0  # empty rows inside occupied groups
+    dense[31] = 0.0
+    tiles = build_tiles(
+        csr_from_dense(dense), PartitionConfig(row_block=32, col_block=32, group=8, lane=8)
+    )
+    X = rng.standard_normal((70, k)).astype(np.float32)
+    Y = np.asarray(
+        hbp_spmm(tiles, X, strategy=strategy, combine="max", interpret=True)
+    )
+    # max is exact arithmetic (no reassociation error): exact equality
+    np.testing.assert_array_equal(Y, _max_oracle(dense, X))
+
+
+@pytest.mark.parametrize("strategy", ["fused", "partials", "stable"])
+def test_max_identity_never_leaks_on_empty_rows(strategy, rng):
+    """Satellite acceptance: with all-negative features, empty rows must
+    yield exactly 0 — the -inf identity of the max monoid (and the 0 of a
+    padded slot's product) must never surface."""
+    dense = np.zeros((48, 50), np.float32)
+    keep = rng.random((48, 50)) < 0.1
+    keep[::5] = False  # every 5th row fully empty
+    # positive weights: every stored product of a negative feature is
+    # negative, so a leaked 0 (padded slot) or -inf (identity) would show
+    dense[keep] = (0.1 + rng.random(int(keep.sum()))).astype(np.float32)
+    csr = csr_from_dense(dense)
+    tiles = build_tiles(csr, PartitionConfig(row_block=16, col_block=32, group=4, lane=4))
+    X = -1.0 - rng.random((50, 6)).astype(np.float32)  # strictly negative
+    Y = np.asarray(hbp_spmm(tiles, X, strategy=strategy, combine="max", interpret=True))
+    assert np.isfinite(Y).all()
+    empty = np.asarray(csr.row_nnz() == 0)
+    assert (Y[empty] == 0).all(), "empty rows must be exactly 0"
+    # non-empty rows of an all-negative product really are negative — the
+    # padded slots' 0 product did not win the max
+    np.testing.assert_array_equal(Y, _max_oracle(dense, X))
+    assert (Y[~empty] < 0).all()
+
+
+def test_max_combine_empty_matrix_is_zero():
+    tiles = build_tiles(
+        csr_from_dense(np.zeros((16, 16), np.float32)),
+        PartitionConfig(row_block=8, col_block=8, group=4, lane=4),
+    )
+    Y = np.asarray(
+        hbp_spmm(tiles, np.ones((16, 3), np.float32), combine="max", interpret=True)
+    )
+    assert Y.shape == (16, 3) and (Y == 0).all()
+
+
+def test_unknown_combine_rejected(rng):
+    tiles = build_tiles(
+        csr_from_dense(np.eye(8, dtype=np.float32)),
+        PartitionConfig(row_block=8, col_block=8, group=4, lane=4),
+    )
+    with pytest.raises(ValueError, match="combine"):
+        hbp_spmm(tiles, np.ones((8, 2), np.float32), combine="min", interpret=True)
+
+
 # --- end-to-end equivalence across the scaled Table-I structural families ---
 
 FAMILIES = {
