@@ -1,0 +1,76 @@
+"""GNN training-step cost: differentiable HBP forward+backward vs dense.
+
+One row per (model/op, feature width): the full training step — forward
+aggregation, cross-entropy, backward (for sum/mean an SpMM against the
+transpose tiles; for max the argmax-routed scatter), AdamW update — on a
+power-law graph.  The derived column reports edge-multiplies per second
+counting forward + backward traffic (2 tile-stream passes for the linear
+ops), and a dense-adjacency training step anchors the sparse-vs-dense
+tradeoff at the same width.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import rmat_graph
+from repro.graph.train import NodeClassifierTrainer
+
+from .common import emit, timeit
+
+K_SWEEP = (32, 128)
+N_CLASSES = 8
+DENSE_MAX_NODES = 1 << 12
+
+
+def _dense_step(D, X, labels, W):
+    def loss(w):
+        logits = jax.nn.relu(D @ (X @ w[0])) @ w[1]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+    g = jax.grad(loss)(W)
+    return [w - 1e-2 * gw for w, gw in zip(W, g)]
+
+
+def main(full: bool = False) -> None:
+    n = 1 << (13 if full else 12)
+    G = rmat_graph(n, 16.0, seed=7)
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, N_CLASSES, n)
+
+    for k in K_SWEEP:
+        X = rng.standard_normal((n, k)).astype(np.float32)
+        # fwd + bwd each stream the tiles once per layer; 2 layers
+        edge_mults = 2 * 2 * G.nnz * k
+        for model, op in (("gcn", "sum"), ("sage", "mean"), ("sage", "max")):
+            tr = NodeClassifierTrainer([k, 32, N_CLASSES], model=model, op=op)
+            agg = tr.aggregator(tr.prepare_adjacency(G))
+            state = tr.init(0)
+            Xj = jnp.asarray(X)
+
+            def step():
+                nonlocal state
+                state, _ = tr.step(state, agg, Xj, labels)
+
+            t = timeit(step, repeats=3, warmup=1)
+            emit(f"gnn_train_{model}_{op}_k{k}", t, f"{edge_mults / t / 1e9:.2f}Gmul/s")
+        if n <= DENSE_MAX_NODES:
+            D = jnp.asarray(G.to_dense(), jnp.float32)
+            Xj = jnp.asarray(X)
+            lj = jnp.asarray(labels)
+            W = [
+                jnp.asarray(rng.standard_normal((k, 32)).astype(np.float32)),
+                jnp.asarray(rng.standard_normal((32, N_CLASSES)).astype(np.float32)),
+            ]
+            t_dense = timeit(
+                lambda: jax.block_until_ready(_dense_step(D, Xj, lj, W)),
+                repeats=3, warmup=1,
+            )
+            emit(f"gnn_train_dense_k{k}", t_dense, "dense 2-layer step")
+
+
+if __name__ == "__main__":
+    main()

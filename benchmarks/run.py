@@ -14,12 +14,13 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,memtraffic,schedule,roofline,solvers,traffic,gnn")
+    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,memtraffic,schedule,roofline,solvers,traffic,gnn,gnn_train")
     args = ap.parse_args()
 
     from . import (
         bench_combine,
         bench_gnn,
+        bench_gnn_train,
         bench_memtraffic,
         bench_preprocess,
         bench_roofline,
@@ -41,6 +42,7 @@ def main() -> None:
         "solvers": bench_solvers.main,      # workload level (beyond-paper)
         "traffic": bench_traffic.main,      # serving engine (beyond-paper)
         "gnn": bench_gnn.main,              # graph aggregation (beyond-paper)
+        "gnn_train": bench_gnn_train.main,  # differentiable fwd+bwd step
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

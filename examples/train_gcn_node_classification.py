@@ -1,0 +1,116 @@
+"""Train a GCN node classifier end to end on the differentiable HBP path.
+
+    PYTHONPATH=src python examples/train_gcn_node_classification.py
+
+The GNN *training* workload on the serving stack: every forward
+aggregation is an HBP SpMM over the registry-resident normalized
+adjacency, and every backward is an HBP SpMM over its linked transpose
+plan (``x̄ = Âᵀ ȳ`` — for GCN's symmetric Â the two plans are literally
+the same residency, linked to itself by content hash).  The script
+
+1. builds a synthetic *homophilous* power-law citation graph — nodes
+   carry class labels and edges prefer same-class endpoints, so the graph
+   structure (not just the features) is informative;
+2. trains a 2-layer GCN for 20 full-graph steps with AdamW and asserts
+   the cross-entropy decreases on average (the CI gate);
+3. runs GraphSAGE neighbor-sampled mini-batches over the same registry
+   for two epochs, showing the second epoch re-admits every sampled
+   subgraph for free (content-hash cache hits).
+
+Autotune state persists in ``.hbp_autotune/`` between runs.
+"""
+import numpy as np
+
+from repro.graph import graph_from_edges
+from repro.graph.train import NodeClassifierTrainer
+from repro.serving import MatrixRegistry
+
+N_NODES = 600
+N_CLASSES = 5
+N_FEATURES = 32
+HOMOPHILY = 0.85  # fraction of edges drawn within a class
+AVG_DEGREE = 8.0
+STEPS = 20
+
+
+def homophilous_graph(rng):
+    """Power-law-ish graph whose edges prefer same-class endpoints."""
+    labels = rng.integers(0, N_CLASSES, N_NODES)
+    m = int(N_NODES * AVG_DEGREE / 2)
+    # Zipf-like popularity so degrees stay skewed (the HBP-relevant shape)
+    p = (1.0 + np.arange(N_NODES)) ** -1.1
+    p /= p.sum()
+    pop = rng.permutation(N_NODES)
+    src = pop[rng.choice(N_NODES, size=m, p=p)]
+    dst = pop[rng.choice(N_NODES, size=m, p=p)]
+    # rewire a HOMOPHILY fraction of destinations to the source's class
+    same = rng.random(m) < HOMOPHILY
+    by_class = [np.flatnonzero(labels == c) for c in range(N_CLASSES)]
+    dst = np.where(
+        same,
+        np.array([rng.choice(by_class[labels[s]]) for s in src]),
+        dst,
+    )
+    keep = src != dst
+    adj = graph_from_edges(src[keep], dst[keep], n_nodes=N_NODES, symmetric=True)
+    return adj, labels
+
+
+def main() -> None:
+    print("== GCN node-classification training over differentiable HBP ==")
+    rng = np.random.default_rng(0)
+    adj, labels = homophilous_graph(rng)
+    # weakly informative features: class signal well below the noise floor,
+    # so the aggregation over same-class neighborhoods has to do the work
+    proj = rng.standard_normal((N_CLASSES, N_FEATURES))
+    X = (0.5 * np.eye(N_CLASSES)[labels] @ proj
+         + rng.standard_normal((N_NODES, N_FEATURES))).astype(np.float32)
+    deg = adj.row_nnz()
+    print(f"graph: {N_NODES} nodes, {adj.nnz} edges, max degree {int(deg.max())}, "
+          f"{N_CLASSES} classes, homophily {HOMOPHILY:.0%}")
+
+    registry = MatrixRegistry(search=False)  # .hbp_autotune/ persists runs
+    trainer = NodeClassifierTrainer(
+        [N_FEATURES, 32, N_CLASSES], model="gcn", registry=registry
+    )
+
+    # --- full-graph GCN ----------------------------------------------------
+    state, history = trainer.fit(adj, X, labels, steps=STEPS, key=0)
+    losses = [h["loss"] for h in history]
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    for h in history[:: max(1, STEPS // 5)]:
+        print(f"  step {h['step']:>3}: loss {h['loss']:.4f}  "
+              f"acc {h['accuracy']:.3f}  |grad| {h['grad_norm']:.3f}")
+    print(f"GCN: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"(first-5 mean {first:.4f}, last-5 mean {last:.4f}), "
+          f"train acc {history[-1]['accuracy']:.3f}")
+    assert last < first, "training loss did not decrease on average"
+    assert history[-1]["accuracy"] > 1.5 / N_CLASSES, "no better than chance"
+
+    # --- GraphSAGE mini-batches over the same registry ---------------------
+    sage = NodeClassifierTrainer(
+        [N_FEATURES, 32, N_CLASSES], model="sage", op="mean", registry=registry
+    )
+    batch_size = 150
+    epoch_batches = -(-N_NODES // batch_size)
+    state_s, hist_s = sage.fit_sampled(
+        adj, X, labels, steps=2 * epoch_batches, batch_size=batch_size,
+        fanouts=(8, 4), key=1, seed=42,
+    )
+    sl = [h["loss"] for h in hist_s]
+    print(f"SAGE mini-batch: loss {sl[0]:.4f} -> {sl[-1]:.4f} over "
+          f"{len(sl)} steps ({epoch_batches} batches x 2 epochs, "
+          f"~{int(np.mean([h['batch_nodes'] for h in hist_s]))} nodes/batch)")
+    batch_plans = [
+        s for name, s in registry.stats().items() if s["shape"][0] < N_NODES
+    ]
+    readmitted = sum(1 for s in batch_plans if s["admissions"] > 1)
+    print(f"registry: {len(registry)} resident plans; "
+          f"{readmitted}/{len(batch_plans)} sampled subgraphs re-admitted free "
+          f"(content-hash hits on epoch 2)")
+    assert readmitted == len(batch_plans), "epoch-2 batches should all be cache hits"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -114,6 +114,26 @@ class CSRMatrix:
         np.add.at(out, rows[mask], self.data[mask])
         return out
 
+    def transpose(self) -> "CSRMatrix":
+        """Aᵀ as a fresh CSR (the CSC view of A, re-read as rows).
+
+        Index-sorted and round-trip exact: the conversion is a stable
+        counting sort over (col, row), so ``A.transpose().transpose()``
+        reproduces ``indptr``/``indices``/``data`` bit for bit — no
+        duplicate merging, no value reordering within ties.  This is the
+        host-side half of the differentiable aggregation path (the VJP of
+        ``A @ X`` is ``Aᵀ @ Ḡ``), but it stands alone as format API.
+        """
+        n_rows, n_cols = self.shape
+        rows = np.repeat(np.arange(n_rows), self.row_nnz())
+        # stable sort by column, then row: Aᵀ's rows come out in order with
+        # sorted inner indices (the rows of A, ascending per column)
+        order = np.lexsort((rows, self.indices))
+        indptr = np.zeros(n_cols + 1, dtype=np.int64)
+        np.add.at(indptr, self.indices + 1, 1)
+        indptr = np.cumsum(indptr)
+        return CSRMatrix(indptr, rows[order], self.data[order], (n_cols, n_rows))
+
     def matvec(self, x: np.ndarray) -> np.ndarray:
         """Reference CSR SpMV (Algorithm 1 of the paper), vectorised."""
         prod = self.data * x[self.indices]

@@ -3,7 +3,14 @@
 # directly.  graph.py builds/normalizes adjacencies (host side), aggregate.py
 # wraps the SpMM combine monoids (sum/mean/max) as traceable operators, and
 # layers_gnn.py composes them into jit-able GCN / GraphSAGE forwards.
-from .aggregate import AGGREGATIONS, aggregate, make_aggregator, plan_aggregator
+from .aggregate import (
+    AGGREGATIONS,
+    aggregate,
+    make_aggregator,
+    make_diff_aggregator,
+    plan_aggregator,
+    plan_diff_aggregator,
+)
 from .graph import (
     add_self_loops,
     degrees,
@@ -27,7 +34,9 @@ __all__ = [
     "AGGREGATIONS",
     "aggregate",
     "make_aggregator",
+    "make_diff_aggregator",
     "plan_aggregator",
+    "plan_diff_aggregator",
     "graph_from_edges",
     "add_self_loops",
     "degrees",

@@ -24,22 +24,32 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.formats import CSRMatrix
 from repro.core.tile import HBPTiles, build_tiles, tuned_partition_config
 
 from .graph import degrees
 
-__all__ = ["AGGREGATIONS", "aggregate", "make_aggregator", "plan_aggregator"]
+__all__ = [
+    "AGGREGATIONS",
+    "aggregate",
+    "make_aggregator",
+    "make_diff_aggregator",
+    "plan_aggregator",
+    "plan_diff_aggregator",
+]
 
 AGGREGATIONS = ("sum", "mean", "max")
 
 
 def _mean_divisor(degree, n_rows: int) -> jax.Array:
-    """[n, 1] clamped in-degree: mean over an empty neighborhood is 0."""
-    d = jnp.asarray(degree, jnp.float32).reshape(n_rows, 1)
-    return jnp.maximum(d, 1.0)
+    """[n, 1] clamped in-degree: mean over an empty neighborhood is 0.
+
+    Delegates to the single clamp-convention home in the kernel layer so
+    the differentiable mean backward can never disagree with the forward."""
+    from repro.kernels.autodiff import mean_divisor
+
+    return mean_divisor(degree, n_rows)
 
 
 def aggregate(
@@ -111,8 +121,10 @@ def make_aggregator(
         interpret=interpret,
         combine="max" if op == "max" else "sum",
     )
+    # degree may be a numpy or jax array alike: _mean_divisor stages it
+    # directly, with no host round-trip for device-resident degrees
     div: Optional[jax.Array] = (
-        _mean_divisor(np.asarray(degree), tiles.shape[0]) if op == "mean" else None
+        _mean_divisor(degree, tiles.shape[0]) if op == "mean" else None
     )
 
     def agg(x: jax.Array) -> jax.Array:
@@ -120,6 +132,52 @@ def make_aggregator(
         return y / div if div is not None else y
 
     return agg
+
+
+def make_diff_aggregator(
+    adj,  # CSRMatrix | kernels.autodiff.PairedTiles
+    *,
+    op: str = "sum",
+    degree=None,
+    cfg=None,
+    cfg_T=None,
+    strategy: str = "stable",
+    interpret: bool | None = None,
+    mode: str = "vjp",
+) -> Callable[[jax.Array], jax.Array]:
+    """Differentiable twin of :func:`make_aggregator`.
+
+    The returned closure supports ``jax.grad`` without tracing into the
+    kernels: sum/mean backward is one HBP SpMM against the transpose
+    adjacency (built here as a paired tile set, see
+    :func:`repro.kernels.autodiff.hbp_transpose`), max backward routes
+    cotangents to the argmax neighbor saved during the forward.  ``adj``
+    is the CSR adjacency or a prebuilt
+    :class:`~repro.kernels.autodiff.PairedTiles`; for ``op="mean"`` the
+    degree defaults to the structural in-degree of the CSR input (pass
+    ``degree=`` explicitly — numpy or jax — for prebuilt pairs).  For
+    served graphs prefer :func:`plan_diff_aggregator` over a registry
+    plan pair, which shares residency and the autotune cache.
+    """
+    from repro.kernels import autodiff
+
+    if op not in AGGREGATIONS:
+        raise ValueError(f"unknown aggregation {op!r} (expected one of {AGGREGATIONS})")
+    if isinstance(adj, CSRMatrix):
+        if op == "mean" and degree is None:
+            degree = degrees(adj)
+        if autodiff.needs_transpose(op, mode):
+            pair = autodiff.hbp_transpose(adj, cfg, cfg_T)
+        else:  # max / jvp never launch the transpose: skip its build
+            tiles = build_tiles(adj, cfg or tuned_partition_config(adj))
+            pair = autodiff.PairedTiles(tiles, None)
+    else:
+        pair = autodiff.PairedTiles(*adj)
+        if op == "mean" and degree is None:
+            raise ValueError("op='mean' over prebuilt tiles needs degree=")
+    return autodiff.diff_aggregator(
+        pair, op=op, degree=degree, strategy=strategy, interpret=interpret, mode=mode
+    )
 
 
 def plan_aggregator(plan, *, op: str = "sum", bucketed: bool = True) -> Callable:
@@ -135,3 +193,17 @@ def plan_aggregator(plan, *, op: str = "sum", bucketed: bool = True) -> Callable
     if op not in AGGREGATIONS:
         raise ValueError(f"unknown aggregation {op!r} (expected one of {AGGREGATIONS})")
     return lambda x: plan.aggregate(x, op=op, bucketed=bucketed)
+
+
+def plan_diff_aggregator(plan, *, op: str = "sum", mode: str = "vjp") -> Callable:
+    """Differentiable aggregator over a registry-resident plan pair.
+
+    The training-side sibling of :func:`plan_aggregator`: admit the
+    adjacency with :meth:`~repro.serving.registry.MatrixRegistry.
+    admit_pair` (A and Aᵀ built together, linked by content hash) and the
+    closure's backward launches the linked transpose plan's tiles.  Mean
+    uses the in-degree the plan captured at admission.
+    """
+    if op not in AGGREGATIONS:
+        raise ValueError(f"unknown aggregation {op!r} (expected one of {AGGREGATIONS})")
+    return plan.diff_aggregator(op=op, mode=mode)

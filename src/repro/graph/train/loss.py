@@ -1,0 +1,39 @@
+"""Node-classification objectives over GNN logits.
+
+Masked means throughout: mini-batch training supervises the *seed* rows
+only (the sampled context exists to feed their aggregation), and
+full-graph training may hold out validation/test node sets — both are the
+same masked cross-entropy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_cross_entropy", "accuracy"]
+
+
+def _masked_mean(values: jax.Array, mask) -> jax.Array:
+    if mask is None:
+        return values.mean()
+    m = jnp.asarray(mask, values.dtype).reshape(values.shape)
+    return (values * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels, mask=None) -> jax.Array:
+    """Mean cross-entropy of ``logits`` [n, C] vs integer ``labels`` [n].
+
+    ``mask`` (optional, [n], nonzero = supervised) restricts the mean to
+    the supervised rows; an all-zero mask yields 0 rather than NaN.
+    """
+    labels = jnp.asarray(labels, jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return _masked_mean(nll, mask)
+
+
+def accuracy(logits: jax.Array, labels, mask=None) -> jax.Array:
+    """Fraction of (masked) rows whose argmax matches the label."""
+    labels = jnp.asarray(labels, jnp.int32)
+    hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return _masked_mean(hit, mask)

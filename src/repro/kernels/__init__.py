@@ -1,7 +1,9 @@
 # Pallas TPU kernels for the paper's compute hot-spot: HBP SpMV.
 # <name>.py holds the pl.pallas_call + BlockSpec kernels, ops.py the jitted
-# public wrappers, ref.py the pure-jnp oracles they are validated against.
-from . import ops, ref
+# public wrappers, ref.py the pure-jnp oracles they are validated against,
+# autodiff.py the custom-VJP layer (backward = the transpose-tiles SpMM).
+from . import autodiff, ops, ref
+from .autodiff import PairedTiles, diff_aggregator, hbp_transpose
 from .ops import (
     K_BUCKETS,
     LANE_TILE,
@@ -9,6 +11,7 @@ from .ops import (
     bucket_k,
     device_tiles,
     hbp_spmm,
+    hbp_spmm_argmax,
     hbp_spmm_bucketed,
     hbp_spmv,
 )
@@ -16,12 +19,17 @@ from .ops import (
 __all__ = [
     "ops",
     "ref",
+    "autodiff",
     "DeviceTiles",
     "device_tiles",
     "hbp_spmv",
     "hbp_spmm",
+    "hbp_spmm_argmax",
     "hbp_spmm_bucketed",
     "bucket_k",
     "K_BUCKETS",
     "LANE_TILE",
+    "PairedTiles",
+    "hbp_transpose",
+    "diff_aggregator",
 ]

@@ -24,6 +24,7 @@ __all__ = [
     "device_tiles",
     "hbp_spmv",
     "hbp_spmm",
+    "hbp_spmm_argmax",
     "hbp_spmm_bucketed",
     "bucket_k",
     "K_BUCKETS",
@@ -350,6 +351,61 @@ def hbp_spmm_bucketed(
     if kb != k:
         x = jnp.pad(x, ((0, 0), (0, kb - k)))
     return hbp_spmm(tiles, x, **kwargs)[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("n_rowgroups", "n_rows"))
+def _hbp_spmm_argmax_device(
+    dt: DeviceTiles,
+    x_blocked: jax.Array,  # f32[n_blocks, col_block, k]
+    *,
+    n_rowgroups: int,
+    n_rows: int,
+):
+    k = x_blocked.shape[-1]
+    if dt.data.shape[0] == 0:  # no tiles: every row is empty
+        return (
+            jnp.zeros((n_rows, k), jnp.float32),
+            jnp.full((n_rows, k), -1, jnp.int32),
+            jnp.zeros((n_rows, k), jnp.float32),
+        )
+    y_h, idx_h, coeff_h = _ref.hbp_spmm_hashed_argmax(
+        dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
+        n_rowgroups=n_rowgroups,
+    )
+    y_h = jnp.where(jnp.isneginf(y_h), 0.0, y_h)  # empty rows aggregate to 0
+    return (
+        _ref.unpermute(y_h, dt.perm, n_rows),
+        _ref.unpermute(idx_h, dt.perm, n_rows),
+        _ref.unpermute(coeff_h, dt.perm, n_rows),
+    )
+
+
+def hbp_spmm_argmax(
+    tiles: HBPTiles | DeviceTiles,
+    x: jax.Array,  # [n_cols, k]
+    *,
+    n_rowgroups: int | None = None,
+    n_rows: int | None = None,
+    col_block: int | None = None,
+):
+    """Max-monoid SpMM with winner tracking: ``(y, idx, coeff)``.
+
+    ``y`` matches ``hbp_spmm(..., combine="max")`` exactly; ``idx[i, c]``
+    is the global source column whose stored entry attained the max (ties
+    to the lowest column, ``-1`` for rows with no live entry) and
+    ``coeff[i, c]`` that entry's value.  This is the forward pass of the
+    differentiable max-aggregation (:mod:`repro.kernels.autodiff`): the
+    VJP scatters ``coeff * cotangent`` back to row ``idx`` of the input.
+    The reduction runs on the monoid-exact jnp path (the same lane chain
+    as ``strategy="stable"``), so values are bitwise identical across
+    batch widths and strategies.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    dt, (n_rowgroups, n_rows, col_block) = _resolve(tiles, x, n_rowgroups, n_rows, col_block)
+    x_blocked = blocked_matrix(x, col_block)
+    return _hbp_spmm_argmax_device(
+        dt, x_blocked, n_rowgroups=n_rowgroups, n_rows=n_rows
+    )
 
 
 def hbp_spmm(

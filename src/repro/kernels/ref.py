@@ -20,6 +20,7 @@ __all__ = [
     "hbp_spmm_hashed_stable",
     "tile_contrib_spmm_max",
     "hbp_spmm_hashed_max",
+    "hbp_spmm_hashed_argmax",
     "unpermute",
 ]
 
@@ -186,6 +187,77 @@ def hbp_spmm_hashed_max(
     return jax.ops.segment_max(contrib, rowgroup, num_segments=n_rowgroups)
 
 
+def hbp_spmm_hashed_argmax(
+    rowgroup: jax.Array,
+    colblock: jax.Array,
+    data: jax.Array,
+    cols: jax.Array,
+    x_blocked: jax.Array,
+    *,
+    n_rowgroups: int,
+):
+    """Max-monoid SpMM that also reports *which* stored entry won.
+
+    Returns ``(y, idx, coeff)`` in hashed row order, each
+    ``[n_rowgroups, group, k]``:
+
+    * ``y`` — the max-SpMM values (``-inf`` identity for rows with no live
+      entry, exactly :func:`hbp_spmm_hashed_max`);
+    * ``idx`` — the *global column id* of the winning stored entry
+      (``-1`` where the row has none), ties broken to the lowest column;
+    * ``coeff`` — the winning entry's stored value ``a_{i, idx}``
+      (0 where the row has none).
+
+    This is the forward of max-aggregation's VJP: the backward routes the
+    cotangent to the winning neighbor, scaled by ``coeff``.  The index is
+    recovered by a **parallel index-SpMM under the same max monoid** — a
+    second pass over the tile stream that reduces ``-col`` (so the max
+    picks the lowest column) over the slots whose product attained ``y``,
+    and a third pass that reads the winner's coefficient.  Three passes
+    keep every reduction inside the monoid the kernels already implement;
+    an on-TPU variant would carry (value, index) as a paired payload in
+    one pass (ROADMAP).
+    """
+    n_cb, col_block, k = x_blocked.shape
+    x_flat = x_blocked.reshape(n_cb * col_block, k)
+    base = colblock[:, None] * col_block  # [T, 1]
+    y = hbp_spmm_hashed_max(
+        rowgroup, colblock, data, cols, x_blocked, n_rowgroups=n_rowgroups
+    )
+    y_t = y[rowgroup]  # [T, group, k] each tile's target row values
+    int_min = jnp.iinfo(jnp.int32).min
+
+    def lane_parts(lane):
+        d = data[:, :, lane, None]  # [T, group, 1]
+        gcol = (base + cols[:, :, lane])[..., None]  # [T, group, 1] global col
+        prod = d * x_flat[base + cols[:, :, lane]]  # [T, group, k]
+        win = (d != 0) & (prod == y_t)
+        return d, gcol, win
+
+    # pass 2: lowest winning global column, as a max of the negated id
+    acc = None
+    for lane in range(data.shape[2]):
+        d, gcol, win = lane_parts(lane)
+        term = jnp.where(win, -gcol.astype(jnp.int32), int_min)
+        acc = term if acc is None else jnp.maximum(acc, term)
+    neg_idx = jax.ops.segment_max(acc, rowgroup, num_segments=n_rowgroups)
+    live = neg_idx > int_min  # also False for never-visited row groups
+    idx = jnp.where(live, -neg_idx, -1)
+
+    # pass 3: the winner's stored coefficient (unique per (row, col) pair)
+    idx_t = idx[rowgroup]
+    acc_c = None
+    for lane in range(data.shape[2]):
+        d = data[:, :, lane, None]
+        gcol = (base + cols[:, :, lane])[..., None].astype(jnp.int32)
+        hit = (d != 0) & (gcol == idx_t)
+        term = jnp.where(hit, jnp.broadcast_to(d, idx_t.shape), -jnp.inf)
+        acc_c = term if acc_c is None else jnp.maximum(acc_c, term)
+    coeff = jax.ops.segment_max(acc_c, rowgroup, num_segments=n_rowgroups)
+    coeff = jnp.where(live, coeff, 0.0)
+    return y, idx, coeff
+
+
 def unpermute(y_hashed: jax.Array, perm: jax.Array, n_rows: int) -> jax.Array:
     """Undo the hash reordering: slot s computed original row ``perm[s]``.
 
@@ -195,5 +267,8 @@ def unpermute(y_hashed: jax.Array, perm: jax.Array, n_rows: int) -> jax.Array:
     """
     flat = y_hashed.reshape((-1,) + y_hashed.shape[2:])
     padded = jnp.zeros((perm.shape[0],) + flat.shape[1:], dtype=y_hashed.dtype)
-    padded = padded.at[perm].set(flat)
+    # perm is a genuine permutation: declaring uniqueness lets XLA drop the
+    # collision handling and makes the scatter linearly transposable (the
+    # jvp-mode autodiff wrappers rely on this)
+    padded = padded.at[perm].set(flat, unique_indices=True)
     return padded[:n_rows]

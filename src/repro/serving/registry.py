@@ -53,6 +53,11 @@ class MatrixPlan:
     admissions: int = 1  # admit() calls that resolved to this plan
     strategy: str = "fused"
     interpret: Optional[bool] = None
+    # A <-> A^T link, set by MatrixRegistry.admit_pair: the transpose
+    # plan's name plus a direct reference (a symmetric matrix links to
+    # itself — one residency serves both directions for free)
+    transpose_name: Optional[str] = None
+    _transpose: object = dataclasses.field(default=None, repr=False, compare=False)
     # device-staged clamped in-degree [n, 1], built on first mean aggregate
     _mean_div: object = dataclasses.field(default=None, repr=False, compare=False)
 
@@ -94,19 +99,46 @@ class MatrixPlan:
         admission) or "max" (the max-monoid kernel path); repeated GNN
         layer calls all reuse the device tiles and autotuned geometry.
         """
-        import jax.numpy as jnp
-
         if op == "sum":
             return self.matmat(x, bucketed=bucketed)
         if op == "mean":
             if self._mean_div is None:  # staged once, like the tiles
-                self._mean_div = jnp.maximum(
-                    jnp.asarray(self.row_nnz, jnp.float32).reshape(-1, 1), 1.0
-                )
+                from repro.kernels.autodiff import mean_divisor
+
+                self._mean_div = mean_divisor(self.row_nnz, self.shape[0])
             return self.matmat(x, bucketed=bucketed) / self._mean_div
         if op == "max":
             return self.matmat(x, bucketed=bucketed, combine="max")
         raise ValueError(f"unknown aggregation {op!r} (sum | mean | max)")
+
+    def diff_aggregator(self, *, op: str = "sum", mode: str = "vjp"):
+        """Differentiable aggregation closure over the resident plan.
+
+        Backward for sum/mean launches the *linked transpose plan's*
+        tiles (``x̄ = Aᵀ @ ȳ``), so the plan must have been admitted with
+        :meth:`MatrixRegistry.admit_pair`; max routes cotangents through
+        the argmax indices its forward saves and needs no transpose.
+        Mean divides by the in-degree captured at admission.
+        """
+        from repro.kernels import autodiff
+
+        needs_t = autodiff.needs_transpose(op, mode)
+        if needs_t and self._transpose is None:
+            raise ValueError(
+                f"plan {self.name!r} has no linked transpose — admit the "
+                "matrix with MatrixRegistry.admit_pair() for differentiable "
+                "sum/mean aggregation"
+            )
+        plan_T = self._transpose
+        return autodiff.device_diff_aggregator(
+            self.device,
+            plan_T.device if plan_T is not None else None,
+            self._meta(),
+            plan_T._meta() if plan_T is not None else None,
+            op=op,
+            degree=self.row_nnz if op == "mean" else None,
+            mode=mode,
+        )
 
     def operator(self):
         """The plan as a solver-ready :class:`LinearOperator`."""
@@ -235,6 +267,52 @@ class MatrixRegistry:
         self._by_hash[key] = name
         return plan
 
+    def admit_pair(
+        self,
+        csr: CSRMatrix,
+        name: Optional[str] = None,
+        *,
+        cfg: Optional[PartitionConfig] = None,
+        cfg_T: Optional[PartitionConfig] = None,
+    ) -> MatrixPlan:
+        """Admit ``csr`` AND its transpose, linked for differentiable use.
+
+        The pair is what training needs: the backward of ``A @ X`` is an
+        SpMM against ``Aᵀ`` (:mod:`repro.kernels.autodiff`), so both
+        directions become resident plans cross-linked via
+        ``transpose_name``.  Content hashing makes every re-admission
+        free, and a *symmetric* matrix (e.g. GCN's normalized adjacency)
+        hashes identically to its transpose — one plan serves both
+        directions, no second build.  Returns the forward plan; reach the
+        transpose through the link (``plan.transpose_name`` /
+        ``registry.transpose_of(plan)``).
+        """
+        plan = self.admit(csr, name, cfg=cfg)
+        if plan._transpose is not None:  # pair already linked (re-admission)
+            partner = plan._transpose
+            if cfg_T is not None and cfg_T != partner.cfg:
+                raise ValueError(
+                    f"transpose of {plan.name!r} is already resident as "
+                    f"{partner.name!r} with config {partner.cfg}; re-admission "
+                    f"pinned {cfg_T} — evict the pair first to rebuild"
+                )
+            if partner is not plan:  # keep both sides' admission stats in step
+                partner.admissions += 1
+            return plan
+        csr_T = csr.transpose()
+        plan_T = self.admit(csr_T, f"{plan.name}::T", cfg=cfg_T)
+        plan.transpose_name = plan_T.name
+        plan._transpose = plan_T
+        plan_T.transpose_name = plan.name
+        plan_T._transpose = plan
+        return plan
+
+    def transpose_of(self, plan: MatrixPlan) -> MatrixPlan:
+        """The linked Aᵀ plan (admit with :meth:`admit_pair` first)."""
+        if plan._transpose is None:
+            raise KeyError(f"plan {plan.name!r} has no linked transpose")
+        return plan._transpose
+
     def get(self, name: str) -> MatrixPlan:
         return self._plans[name]
 
@@ -250,6 +328,10 @@ class MatrixRegistry:
     def evict(self, name: str) -> None:
         plan = self._plans.pop(name)
         del self._by_hash[plan.matrix_hash]
+        partner = plan._transpose
+        if partner is not None and partner is not plan:
+            partner.transpose_name = None
+            partner._transpose = None
 
     def stats(self) -> dict:
         """Per-matrix admission/preprocessing snapshot (engine adds traffic)."""

@@ -5,3 +5,31 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def hypothesis_or_shim():
+    """(given, settings, st) — real hypothesis, or decorators that skip.
+
+    Lets a module keep its deterministic unit tests runnable when
+    hypothesis is absent, with only the ``@given`` property tests
+    skipping.  Usage::
+
+        from conftest import hypothesis_or_shim
+        given, settings, st = hypothesis_or_shim()
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+
+        return given, settings, st
+    except ImportError:
+        class _NoHypStrategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        def given(*a, **k):
+            return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+        return given, settings, _NoHypStrategies()

@@ -2,8 +2,9 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_shim
+
+given, settings, st = hypothesis_or_shim()
 
 from repro.core import CSRMatrix, csr_from_dense, Partition2D, PartitionConfig
 from repro.core.formats import COOMatrix, csr_from_coo
@@ -57,3 +58,68 @@ def test_partition_block_entries_cover_all(rng):
             recon[rows + bi * 32, cols + bj * 64] += data
     assert total == csr.nnz
     assert np.allclose(recon, dense)
+
+
+# --- transpose -------------------------------------------------------------
+
+
+@given(st.integers(2, 40), st.integers(2, 40), st.floats(0.0, 0.6), st.integers(0, 6))
+@settings(max_examples=40, deadline=None)
+def test_transpose_dense_equivalence_and_roundtrip(m, k, density, seed):
+    """A.T matches the dense transpose; transposing twice reproduces the
+    original CSR arrays bit for bit (index-sorted, no reordering)."""
+    rng = np.random.default_rng(seed)
+    dense = (rng.standard_normal((m, k)) * (rng.random((m, k)) < density)).astype(
+        np.float32
+    )
+    csr = csr_from_dense(dense)
+    t = csr.transpose()
+    assert t.shape == (k, m)
+    np.testing.assert_array_equal(t.to_dense(), dense.T)
+    # indices sorted within every row of the transpose
+    for i in range(k):
+        cols, _ = t.row_slice(i)
+        assert (np.diff(cols) > 0).all()
+    back = t.transpose()
+    np.testing.assert_array_equal(back.indptr, csr.indptr)
+    np.testing.assert_array_equal(back.indices, csr.indices)
+    np.testing.assert_array_equal(back.data, csr.data)
+
+
+def test_transpose_unit_sorted_and_roundtrip(rng):
+    """Deterministic twin of the property test (runs without hypothesis):
+    dense equivalence, per-row sorted indices, bit-exact double transpose."""
+    dense = (rng.standard_normal((23, 31)) * (rng.random((23, 31)) < 0.3)).astype(
+        np.float32
+    )
+    csr = csr_from_dense(dense)
+    t = csr.transpose()
+    assert t.shape == (31, 23)
+    np.testing.assert_array_equal(t.to_dense(), dense.T)
+    for i in range(t.n_rows):
+        cols, _ = t.row_slice(i)
+        assert (np.diff(cols) > 0).all()
+    back = t.transpose()
+    np.testing.assert_array_equal(back.indptr, csr.indptr)
+    np.testing.assert_array_equal(back.indices, csr.indices)
+    np.testing.assert_array_equal(back.data, csr.data)
+
+
+def test_transpose_empty_and_empty_rows():
+    csr = CSRMatrix(np.zeros(4, np.int64), np.zeros(0, np.int64), np.zeros(0), (3, 5))
+    t = csr.transpose()
+    assert t.shape == (5, 3) and t.nnz == 0
+    # a matrix whose only entries leave empty transpose rows
+    d = np.zeros((3, 4), np.float32)
+    d[1, 2] = 5.0
+    t2 = csr_from_dense(d).transpose()
+    np.testing.assert_array_equal(t2.to_dense(), d.T)
+
+
+def test_transpose_matvec_is_rmatvec(rng):
+    dense = (rng.standard_normal((30, 18)) * (rng.random((30, 18)) < 0.3)).astype(
+        np.float32
+    )
+    csr = csr_from_dense(dense)
+    y = rng.standard_normal(30).astype(np.float32)
+    np.testing.assert_allclose(csr.transpose().matvec(y), dense.T @ y, rtol=1e-5)

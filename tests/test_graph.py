@@ -176,6 +176,23 @@ def test_aggregate_validation(rng):
         make_aggregator(tiles, op="mean")
 
 
+def test_make_aggregator_mean_accepts_device_degree(rng):
+    """degree may arrive as a jax array (e.g. computed on device by a
+    training loop) — no host np.asarray round-trip in the closure build."""
+    import jax.numpy as jnp
+
+    G = power_law_graph(120, 4.0, seed=9)
+    X = rng.standard_normal((120, 6)).astype(np.float32)
+    deg_dev = jnp.asarray(degrees(G))
+    agg = make_aggregator(G, op="mean", degree=deg_dev)
+    np.testing.assert_allclose(
+        np.asarray(agg(X)), _mean_oracle(G, X), rtol=1e-4, atol=1e-4
+    )
+    tiles = build_tiles(G, PartitionConfig(row_block=64, col_block=64, group=8, lane=8))
+    Y = aggregate(tiles, X, op="mean", degree=deg_dev, interpret=True)
+    np.testing.assert_allclose(np.asarray(Y), _mean_oracle(G, X), rtol=1e-4, atol=1e-4)
+
+
 def test_make_aggregator_closure_is_jittable(rng):
     G = power_law_graph(150, 4.0, seed=4)
     agg = make_aggregator(G, op="mean")
