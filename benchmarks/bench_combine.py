@@ -11,7 +11,7 @@ from repro.core import PartitionConfig, build_tiles
 from repro.core.matrices import rmat
 from repro.kernels import device_tiles
 from repro.kernels.ops import blocked_vector
-from repro.kernels.ref import tile_contrib_ref, unpermute
+from repro.kernels.ref import tile_contrib_ref
 
 from .common import emit, timeit
 

@@ -52,8 +52,12 @@ def main(full: bool = False) -> None:
             Xj = jnp.asarray(X)
 
             def step():
+                # returning the new state lets timeit block on it: the
+                # update is async-dispatched, and an unsynchronized clock
+                # would time dispatch instead of the training step
                 nonlocal state
                 state, _ = tr.step(state, agg, Xj, labels)
+                return state
 
             t = timeit(step, repeats=3, warmup=1)
             emit(f"gnn_train_{model}_{op}_k{k}", t, f"{edge_mults / t / 1e9:.2f}Gmul/s")

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.hash import hash_slot, sample_params
+from repro.core.hash import sample_params
 from repro.core.partition import PartitionConfig, count_block_nnz
 from repro.core.reorder import dp_reorder
 

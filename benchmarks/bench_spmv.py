@@ -86,7 +86,9 @@ def main(full: bool = False) -> None:
 
         # data+col streams + one 64B transaction per random x read + ptr+y
         csr_bytes = nnz * 12 + nnz * 64 + csr.n_rows * 12
-        g = lambda t: 2 * nnz / t / 1e9
+
+        def g(t):
+            return 2 * nnz / t / 1e9
         t_hbp, hbp_bytes = results["hbp"]
         t_2d, d2_bytes = results["2d"]
         t_tuned, tuned_bytes = results["hbp-tuned"]

@@ -13,7 +13,7 @@ from repro.core.hash import sample_params
 from repro.core.partition import PartitionConfig, count_block_nnz
 from repro.core.reorder import hash_reorder_block
 
-from .common import emit, load_suite, timeit
+from .common import emit, load_suite
 
 
 def analyze(csr, row_block=512, group=32):

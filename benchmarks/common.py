@@ -1,8 +1,21 @@
-"""Shared benchmark utilities: timing, the scaled Table-I suite, CSV."""
+"""Shared benchmark utilities: timing, the scaled Table-I suite, CSV/JSON.
+
+Every timed sample is **device-synchronized**: :func:`timeit` calls
+``jax.block_until_ready`` on whatever the benchmarked callable returns
+(arbitrary pytrees are fine, non-array leaves are ignored), so wall-clock
+numbers never measure async dispatch instead of compute.  Callables must
+therefore *return* the values they produce; already-blocking callables
+pay one no-op re-block.
+
+:func:`emit` prints the historical ``name,us_per_call,derived`` CSV row
+AND appends a structured record (name, config, median/p50/p99 in
+microseconds) to :data:`RESULTS`, which ``benchmarks.run --json PATH``
+dumps for the CI regression gate (``benchmarks.compare``).
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Iterable
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -13,24 +26,78 @@ from repro.core.matrices import SUITE_SPECS
 # fast; --full sweeps the whole scaled Table-I analogue suite.
 DEFAULT_SUITE = ["m1_asic320k", "m4_kron16", "m8_mip1", "m10_ohne2", "m14_rajat30"]
 
+# structured records of the current run, dumped by ``run.py --json``
+RESULTS: List[dict] = []
+
 
 def load_suite(full: bool = False, seed: int = 0) -> Dict[str, CSRMatrix]:
     names = list(SUITE_SPECS) if full else DEFAULT_SUITE
     return {n: SUITE_SPECS[n](seed) for n in names}
 
 
-def timeit(fn: Callable, *, repeats: int = 5, warmup: int = 2) -> float:
-    """Median wall time in seconds."""
+class Timing(float):
+    """Median wall seconds that also carries the repeat distribution.
+
+    A plain ``float`` subclass: every existing arithmetic call site keeps
+    working, while :func:`emit` lifts the attached ``stats`` dict
+    (median/p50/p99 microseconds, repeat count) into the JSON record.
+    """
+
+    stats: dict
+
+    @classmethod
+    def from_samples(cls, ts) -> "Timing":
+        ts = np.asarray(ts, dtype=np.float64)
+        t = cls(float(np.median(ts)))
+        t.stats = {
+            "repeats": int(ts.size),
+            "median_us": float(np.median(ts) * 1e6),
+            # min-of-N: the noise-robust point estimate the regression
+            # gate compares (medians swing with machine load; the floor
+            # tracks the actual cost of the code)
+            "min_us": float(ts.min() * 1e6),
+            "p50_us": float(np.percentile(ts, 50) * 1e6),
+            "p99_us": float(np.percentile(ts, 99) * 1e6),
+        }
+        return t
+
+
+def timeit(fn: Callable, *, repeats: int = 5, warmup: int = 2) -> Timing:
+    """Median wall time in seconds, device-synchronized.
+
+    The returned value of ``fn`` is blocked on before the clock stops
+    (``jax.block_until_ready`` walks any pytree and ignores non-arrays),
+    so async-dispatched jax work is always inside the measurement.
+    """
+    import jax
+
     for _ in range(warmup):
-        fn()
+        jax.block_until_ready(fn())
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        fn()
+        jax.block_until_ready(fn())
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return Timing.from_samples(ts)
 
 
-def emit(name: str, seconds: float, derived: str = "") -> None:
-    """CSV row: name,us_per_call,derived."""
+def emit(
+    name: str,
+    seconds: float,
+    derived: str = "",
+    config: Optional[dict] = None,
+) -> None:
+    """CSV row ``name,us_per_call,derived`` + structured JSON record."""
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    us = float(seconds) * 1e6
+    record = {
+        "name": name,
+        "config": config or {},
+        "median_us": us,
+        "p50_us": us,
+        "p99_us": us,
+        "derived": derived,
+    }
+    if isinstance(seconds, Timing):
+        record.update(seconds.stats)
+    RESULTS.append(record)

@@ -1,0 +1,115 @@
+"""Benchmark regression gate: compare a --json run against a baseline.
+
+CI runs the smoke benches (``benchmarks.run --only preprocess,spmm --json
+BENCH_ci.json``) and gates merges on
+
+    python -m benchmarks.compare BENCH_ci.json \
+        --baseline benchmarks/baseline.json --threshold 0.25
+
+A record regresses when its gate metric exceeds the baseline's by more
+than ``threshold`` (fractional).  The gate metric is ``min_us`` (the
+min-of-N floor, robust to machine-load noise) when both sides carry it,
+else ``median_us``.  Records present on only one side are
+reported but never fail the gate — new benches enter the baseline on the
+next refresh (see README "Benchmarking & regression gates"), and retired
+ones leave it.  Exit status: 0 clean, 1 regression(s).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_records(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    records = payload["benches"] if isinstance(payload, dict) else payload
+    out = {}
+    for rec in records:
+        name = rec["name"]
+        if name in out:
+            # a bench emitted the same name twice — never silently drop a
+            # sample from the gate: keep the slower record (conservative)
+            # and say so
+            prev = out[name]
+            metric = "min_us" if ("min_us" in prev and "min_us" in rec) else "median_us"
+            keep = rec if rec[metric] >= prev[metric] else prev
+            print(f"WARN {path}: duplicate record {name!r}; keeping the slower one")
+            out[name] = keep
+        else:
+            out[name] = rec
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="JSON written by benchmarks.run --json")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="allowed fractional slowdown vs baseline (default 0.25 = +25%%)",
+    )
+    ap.add_argument(
+        "--prefix",
+        default=None,
+        help="only gate records whose name starts with one of these "
+        "comma-separated prefixes (default: every shared record)",
+    )
+    args = ap.parse_args(argv)
+
+    cur = load_records(args.current)
+    base = load_records(args.baseline)
+    prefixes = (
+        tuple(p.strip() for p in args.prefix.split(",") if p.strip())
+        if args.prefix
+        else None
+    )
+
+    def gated(name: str) -> bool:
+        return prefixes is None or name.startswith(prefixes)
+
+    regressions, improved, skipped = [], [], []
+    for name in sorted(set(cur) | set(base)):
+        if not gated(name):
+            continue
+        if name not in base:
+            skipped.append((name, "not in baseline (new bench?)"))
+            continue
+        if name not in cur:
+            skipped.append((name, "not in current run"))
+            continue
+        rb, rc = base[name], cur[name]
+        metric = "min_us" if ("min_us" in rb and "min_us" in rc) else "median_us"
+        b, c = rb[metric], rc[metric]
+        if b <= 0:  # analytic/zero-cost rows carry no timing signal
+            skipped.append((name, "baseline has no timing"))
+            continue
+        ratio = c / b
+        line = f"{name}: {b:.1f}us -> {c:.1f}us ({ratio:.2f}x {metric})"
+        if ratio > 1.0 + args.threshold:
+            regressions.append(line)
+        elif ratio < 1.0:
+            improved.append(line)
+
+    for name, why in skipped:
+        print(f"SKIP {name}: {why}")
+    for line in improved:
+        print(f"OK   {line}")
+    if regressions:
+        print(
+            f"\n{len(regressions)} regression(s) past the "
+            f"+{args.threshold:.0%} gate:",
+            file=sys.stderr,
+        )
+        for line in regressions:
+            print(f"FAIL {line}", file=sys.stderr)
+        return 1
+    print(f"\ngate clean (threshold +{args.threshold:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

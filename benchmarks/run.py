@@ -2,11 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` sweeps the whole
 scaled Table-I suite (slower); the default subset covers every structural
-family.
+family.  ``--only`` takes a comma-separated subset of bench names;
+``--json PATH`` additionally writes the structured per-bench records
+(name, config, median/p50/p99 µs) that ``benchmarks.compare`` gates CI
+regressions against.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -14,7 +18,18 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None, help="comma list: stddev,preprocess,spmv,combine,memtraffic,schedule,roofline,solvers,traffic,gnn,gnn_train")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma list: stddev,preprocess,spmv,spmm,combine,memtraffic,"
+        "schedule,roofline,solvers,traffic,gnn,gnn_train",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="write structured per-bench records (median/p50/p99 µs) to PATH",
+    )
     args = ap.parse_args()
 
     from . import (
@@ -26,15 +41,18 @@ def main() -> None:
         bench_roofline,
         bench_schedule,
         bench_solvers,
+        bench_spmm,
         bench_spmv,
         bench_stddev,
         bench_traffic,
+        common,
     )
 
     benches = {
         "stddev": bench_stddev.main,        # Fig. 6
         "preprocess": bench_preprocess.main,  # Fig. 7
         "spmv": bench_spmv.main,            # Figs. 8/10
+        "spmm": bench_spmm.main,            # one-pass kernel grid (beyond-paper)
         "combine": bench_combine.main,      # Fig. 9
         "memtraffic": bench_memtraffic.main,  # Table II
         "schedule": bench_schedule.main,    # §III-C
@@ -44,7 +62,16 @@ def main() -> None:
         "gnn": bench_gnn.main,              # graph aggregation (beyond-paper)
         "gnn_train": bench_gnn_train.main,  # differentiable fwd+bwd step
     }
-    selected = args.only.split(",") if args.only else list(benches)
+    if args.only:
+        selected = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in selected if s not in benches]
+        if unknown:
+            ap.error(
+                f"unknown bench name(s) {', '.join(unknown)} — "
+                f"choose from: {', '.join(benches)}"
+            )
+    else:
+        selected = list(benches)
     print("name,us_per_call,derived")
     ok = True
     for name in selected:
@@ -54,6 +81,16 @@ def main() -> None:
             ok = False
             print(f"{name},0,ERROR", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        payload = {
+            "schema": 1,
+            "full": args.full,
+            "selected": selected,
+            "benches": common.RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {len(common.RESULTS)} records to {args.json}", file=sys.stderr)
     if not ok:
         sys.exit(1)
 

@@ -11,7 +11,6 @@ import numpy as np
 from repro.core import (
     PartitionConfig,
     build_tiles,
-    csr_from_dense,
     group_stddev,
     padding_waste,
     spmv,

@@ -107,7 +107,7 @@ def main() -> None:
     readmitted = sum(1 for s in batch_plans if s["admissions"] > 1)
     print(f"registry: {len(registry)} resident plans; "
           f"{readmitted}/{len(batch_plans)} sampled subgraphs re-admitted free "
-          f"(content-hash hits on epoch 2)")
+          "(content-hash hits on epoch 2)")
     assert readmitted == len(batch_plans), "epoch-2 batches should all be cache hits"
     print("OK")
 

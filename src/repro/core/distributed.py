@@ -21,7 +21,7 @@ the paper's equal-length fixed quota.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Tuple
+from typing import Literal
 
 import numpy as np
 

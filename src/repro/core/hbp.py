@@ -29,7 +29,7 @@ DESIGN.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .hash import HashParams, hash_reorder, sample_params
+from .hash import HashParams, hash_reorder
 
 __all__ = [
     "identity_reorder",

@@ -23,7 +23,6 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.formats import CSRMatrix
 from repro.core.tile import HBPTiles, build_tiles, tuned_partition_config

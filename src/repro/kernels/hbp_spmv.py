@@ -34,6 +34,30 @@ staged as ``[n_col_blocks, col_block, k]`` segments with the RHS columns in
 the lane dimension, so one launch reads the tile stream once for all ``k``
 right-hand sides — the workload shape of blocked Krylov solvers and
 multi-personalization PageRank (see ``repro.solvers``).
+
+**2D k-tiled grid.**  One VREG holds :data:`LANE_TILE` = 128 lanes, so a
+single grid step carries at most 128 RHS columns.  Wider feature blocks
+(``k`` a multiple of 128, padded by the caller) run on a **2D grid**
+instead of the legacy host-side loop of ceil(k/128) separate launches
+(``ops.hbp_spmm(..., k_tiling="loop")`` keeps that geometry for
+comparison).  The two kernel families tile k differently, because Pallas
+TPU only preserves an output block across *consecutive* grid steps:
+
+* **partials** — grid ``(T, k // LANE_TILE)``, tile-major.  Every step
+  writes its own output block ``(t, j)``, so no revisit is needed; the
+  (data, cols) block maps depend only on ``t`` and Pallas fetches each
+  tile ONCE, revisited across k-tiles — the stream is read once total.
+* **fused** — grid ``(k // LANE_TILE, T)``, k-tile-major (outer).  The
+  fused combine *accumulates* into output block ``(rg[t], j)``, which is
+  only well-defined while revisits are consecutive — so the reduction
+  dimension ``t`` must be innermost.  For each k-tile the t sweep re-reads
+  the stream (same bytes as the legacy loop), but the whole width is one
+  launch: no per-chunk host round-trips, and the grid pipeline overlaps
+  the k-tiles' transfers.
+
+Each in-flight block spans ≤128 lanes, so no step spills the VPU's lane
+dimension, and interpret-mode results are bitwise-identical to the
+legacy loop chunking (same per-(rg, j) accumulation order).
 """
 from __future__ import annotations
 
@@ -45,6 +69,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
+    "LANE_TILE",
     "hbp_spmv_fused",
     "hbp_spmv_partials",
     "hbp_spmm_fused",
@@ -52,6 +77,24 @@ __all__ = [
     "hbp_spmm_fused_max",
     "hbp_spmm_partials_max",
 ]
+
+# Widest RHS block one grid step carries: k sits in the lane dimension of
+# the x segment and the output tile, and one VREG holds 128 lanes.  Wider
+# k runs the 2D k-tiled grid (k-tile inner, tile stream fetched once).
+LANE_TILE = 128
+
+
+def _k_grid(k: int):
+    """(k_tile, n_k_tiles) of the 2D launch; k > LANE_TILE must be padded
+    to a LANE_TILE multiple by the caller (``ops._hbp_spmm_device`` does)."""
+    if k <= LANE_TILE:
+        return k, 1
+    if k % LANE_TILE:
+        raise ValueError(
+            f"k = {k} exceeds one lane tile ({LANE_TILE}) and is not a "
+            "multiple of it — pad the RHS block before launching"
+        )
+    return LANE_TILE, k // LANE_TILE
 
 
 def _fused_kernel(rowgroup_ref, colblock_ref, first_ref, data_ref, cols_ref, x_ref, y_ref):
@@ -102,8 +145,13 @@ def hbp_spmv_fused(
 
 
 def _fused_spmm_kernel(rowgroup_ref, colblock_ref, first_ref, data_ref, cols_ref, x_ref, y_ref):
-    """Multi-RHS variant: y[rowgroup[t]] += einsum('gl,glk->gk', data, x_seg[cols])."""
-    t = pl.program_id(0)
+    """Multi-RHS variant: y[rowgroup[t]] += einsum('gl,glk->gk', data, x_seg[cols]).
+
+    The tile index t is the LAST grid dimension (k-tile-major 2D grid):
+    the accumulation revisits output block (rg[t], j), and Pallas TPU
+    preserves an output block only across consecutive grid steps — so the
+    reduction dim t must be innermost."""
+    t = pl.program_id(1)
 
     @pl.when(first_ref[t] == 1)
     def _init():
@@ -133,20 +181,23 @@ def hbp_spmm_fused(
     times, so blocked iterative solvers and multi-personalization PageRank
     amortize the format bytes across RHS columns.  ``k`` sits in the lane
     dimension (the x segment is ``[col_block, k]``), keeping the gather on
-    the sublane axis exactly as in the SpMV kernel.  Returns y in hashed
-    row order, shape [n_rowgroups, group, k].
+    the sublane axis exactly as in the SpMV kernel; beyond one lane tile
+    the grid grows a k-tile dimension — OUTER, because the fused combine's
+    output revisits must stay consecutive in t (module docstring).
+    Returns y in hashed row order, shape [n_rowgroups, group, k].
     """
     T, group, lane = data.shape
     col_block, k = x_blocked.shape[1], x_blocked.shape[2]
+    kt, n_kt = _k_grid(k)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(T,),
+        grid=(n_kt, T),
         in_specs=[
-            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
-            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
-            pl.BlockSpec((1, col_block, k), lambda t, rg, cb, fs: (cb[t], 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda j, t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda j, t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, col_block, kt), lambda j, t, rg, cb, fs: (cb[t], 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, group, k), lambda t, rg, cb, fs: (rg[t], 0, 0)),
+        out_specs=pl.BlockSpec((1, group, kt), lambda j, t, rg, cb, fs: (rg[t], 0, j)),
     )
     return pl.pallas_call(
         _fused_spmm_kernel,
@@ -161,8 +212,10 @@ def _fused_spmm_max_kernel(rowgroup_ref, colblock_ref, first_ref, data_ref, cols
 
     Padded slots (stored value 0) are masked to -inf — the max identity —
     instead of contributing 0; empty output rows therefore come back -inf
-    for the host wrapper to zero (``ops._hbp_spmm_device``)."""
-    t = pl.program_id(0)
+    for the host wrapper to zero (``ops._hbp_spmm_device``).  Like the sum
+    variant, t is the last (innermost) grid dim: the maximum accumulation
+    revisits its output block and revisits must be consecutive."""
+    t = pl.program_id(1)
 
     @pl.when(first_ref[t] == 1)
     def _init():
@@ -189,22 +242,24 @@ def hbp_spmm_fused_max(
 ) -> jax.Array:
     """Fused-combine HBP SpMM under the max monoid (GNN max-aggregation).
 
-    Identical tile stream and revisit pattern to :func:`hbp_spmm_fused`;
-    the accumulation is ``maximum`` with identity ``-inf`` instead of
-    ``+`` with identity 0.  Returns hashed-order [n_rowgroups, group, k]
-    with ``-inf`` in rows that saw no live entry.
+    Identical tile stream and revisit pattern to :func:`hbp_spmm_fused`
+    (including the k-tile-OUTER 2D grid beyond one lane tile); the
+    accumulation is ``maximum`` with identity ``-inf`` instead of ``+``
+    with identity 0.  Returns hashed-order [n_rowgroups, group, k] with
+    ``-inf`` in rows that saw no live entry.
     """
     T, group, lane = data.shape
     col_block, k = x_blocked.shape[1], x_blocked.shape[2]
+    kt, n_kt = _k_grid(k)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(T,),
+        grid=(n_kt, T),
         in_specs=[
-            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
-            pl.BlockSpec((1, group, lane), lambda t, rg, cb, fs: (t, 0, 0)),
-            pl.BlockSpec((1, col_block, k), lambda t, rg, cb, fs: (cb[t], 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda j, t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda j, t, rg, cb, fs: (t, 0, 0)),
+            pl.BlockSpec((1, col_block, kt), lambda j, t, rg, cb, fs: (cb[t], 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, group, k), lambda t, rg, cb, fs: (rg[t], 0, 0)),
+        out_specs=pl.BlockSpec((1, group, kt), lambda j, t, rg, cb, fs: (rg[t], 0, j)),
     )
     return pl.pallas_call(
         _fused_spmm_max_kernel,
@@ -233,18 +288,20 @@ def hbp_spmm_partials_max(
     interpret: bool = False,
 ) -> jax.Array:
     """SpMM part only under the max monoid: per-tile partial blocks
-    [T, group, k]; the combine part reduces them with ``segment_max``."""
+    [T, group, k]; the combine part reduces them with ``segment_max``.
+    Wide k runs the 2D k-tiled grid like the sum variant."""
     T, group, lane = data.shape
     col_block, k = x_blocked.shape[1], x_blocked.shape[2]
+    kt, n_kt = _k_grid(k)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(T,),
+        grid=(T, n_kt),
         in_specs=[
-            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
-            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
-            pl.BlockSpec((1, col_block, k), lambda t, cb: (cb[t], 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, j, cb: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, j, cb: (t, 0, 0)),
+            pl.BlockSpec((1, col_block, kt), lambda t, j, cb: (cb[t], 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, group, k), lambda t, cb: (t, 0, 0)),
+        out_specs=pl.BlockSpec((1, group, kt), lambda t, j, cb: (t, 0, j)),
     )
     return pl.pallas_call(
         _partials_spmm_max_kernel,
@@ -309,18 +366,21 @@ def hbp_spmm_partials(
     interpret: bool = False,
 ) -> jax.Array:
     """SpMM part only (two-phase multi-RHS): per-tile partial blocks
-    [T, group, k]; the combine part reduces them by row group."""
+    [T, group, k]; the combine part reduces them by row group.  Wide k
+    runs the 2D k-tiled grid — the (data, cols) blocks depend only on
+    ``t``, so the stream is fetched once per tile, not once per k chunk."""
     T, group, lane = data.shape
     col_block, k = x_blocked.shape[1], x_blocked.shape[2]
+    kt, n_kt = _k_grid(k)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(T,),
+        grid=(T, n_kt),
         in_specs=[
-            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
-            pl.BlockSpec((1, group, lane), lambda t, cb: (t, 0, 0)),
-            pl.BlockSpec((1, col_block, k), lambda t, cb: (cb[t], 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, j, cb: (t, 0, 0)),
+            pl.BlockSpec((1, group, lane), lambda t, j, cb: (t, 0, 0)),
+            pl.BlockSpec((1, col_block, kt), lambda t, j, cb: (cb[t], 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, group, k), lambda t, cb: (t, 0, 0)),
+        out_specs=pl.BlockSpec((1, group, kt), lambda t, j, cb: (t, 0, j)),
     )
     return pl.pallas_call(
         _partials_spmm_kernel,

@@ -28,6 +28,7 @@ __all__ = [
     "hbp_spmm_bucketed",
     "bucket_k",
     "K_BUCKETS",
+    "K_TILINGS",
     "LANE_TILE",
     "blocked_vector",
     "blocked_matrix",
@@ -38,15 +39,23 @@ __all__ = [
 # compile one kernel per distinct k; padding to the next bucket bounds the
 # compile count at len(K_BUCKETS) per matrix geometry.  The top bucket is
 # one full lane tile (128): beyond it ``bucket_k`` rounds up to multiples
-# of 128, each served as whole LANE_TILE-wide chunks of the lane-tiled k
-# loop — so GNN feature widths (256, 512, ...) add at most one partially
-# padded chunk, never an unbounded compile set.
+# of 128, each served as one k-tile of the 2D-grid launch — so GNN feature
+# widths (256, 512, ...) add at most one partially padded k-tile, never an
+# unbounded compile set.
 K_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
 
-# Widest RHS block a single kernel launch carries: k sits in the lane
-# dimension of the x segment and the output tile, and one VREG holds 128
-# lanes.  ``_hbp_spmm_device`` tiles wider k over sequential launches.
-LANE_TILE = 128
+# Widest RHS block one kernel grid step carries (defined with the kernels;
+# re-exported here for the serving/bucketing layers).  Wider k runs the 2D
+# k-tiled grid — or, under the legacy ``k_tiling="loop"`` contract, a
+# host-side loop of sequential <=128-wide launches.
+LANE_TILE = _k.LANE_TILE
+
+# Launch contracts for k wider than one lane tile: "grid" (default) reads
+# the tile stream once — Pallas strategies via the 2D (tile, k-tile) grid,
+# jnp strategies via a single full-width lane chain; "loop" is the legacy
+# host-side chunk loop (one launch per 128-wide chunk, the tile stream
+# re-read by each), kept as the equivalence/benchmark baseline.
+K_TILINGS = ("grid", "loop")
 
 
 class DeviceTiles(NamedTuple):
@@ -154,10 +163,13 @@ def _spmm_hashed_chunk(
     combine: str,
     interpret: bool,
 ) -> jax.Array:
-    """One <=LANE_TILE-wide SpMM launch, output in hashed row order.
+    """One SpMM launch on the selected strategy, output in hashed row order.
 
-    Under ``combine="max"`` empty rows carry the monoid identity ``-inf``
-    here; the caller maps it to 0 once, after all chunks are assembled."""
+    The jnp strategies take any k; the Pallas strategies take k <= LANE_TILE
+    (one grid column) or a LANE_TILE multiple (the 2D k-tiled grid) — the
+    caller (``_hbp_spmm_device``) pads accordingly.  Under ``combine="max"``
+    empty rows carry the monoid identity ``-inf`` here; the caller maps it
+    to 0 once, after assembly."""
     if combine == "max":
         if strategy == "fused":
             y = _k.hbp_spmm_fused_max(
@@ -207,7 +219,9 @@ def _spmm_hashed_chunk(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_rowgroups", "n_rows", "strategy", "interpret", "combine"),
+    static_argnames=(
+        "n_rowgroups", "n_rows", "strategy", "interpret", "combine", "k_tiling",
+    ),
 )
 def _hbp_spmm_device(
     dt: DeviceTiles,
@@ -218,32 +232,63 @@ def _hbp_spmm_device(
     strategy: str,
     interpret: bool,
     combine: str = "sum",
+    k_tiling: str = "grid",
 ) -> jax.Array:
-    """Hashed SpMM + unpermute, lane-tiling the RHS width.
+    """Hashed SpMM + unpermute, k-tiling the RHS width.
 
-    ``k`` lives in the lane dimension of the kernels, so a single launch
+    ``k`` lives in the lane dimension of the kernels, so one grid step
     carries at most :data:`LANE_TILE` RHS columns.  Wider feature blocks
-    (GNN aggregation at k = 256, 512, ...) are served by a **lane-tiled k
-    loop**: the RHS is split into LANE_TILE-wide chunks, each chunk runs
-    the full tile stream through the selected strategy, and the hashed
-    outputs are concatenated before the single unpermute.  The tile stream
-    is re-read once per chunk — ceil(k / 128) passes instead of the k
-    passes of SpMV-per-column — and every chunk stays on the fast
-    (<=128-lane) path instead of spilling the VPU's lane dimension.
+    (GNN aggregation at k = 256, 512, ...) are served under one of two
+    launch contracts:
 
-    Chunking never changes results: each strategy's lane reduction is
+    * ``k_tiling="grid"`` (default, one-pass) — the Pallas strategies pad
+      k to a LANE_TILE multiple and run the kernels' **2D k-tiled grid**
+      as ONE launch.  ``"partials"`` is tile-major: its (data, cols)
+      block maps depend only on the tile index, so the stream is fetched
+      once and revisited across k-tiles — one read total.  ``"fused"`` is
+      k-tile-major (its in-kernel accumulation revisits output blocks,
+      which Pallas TPU only preserves across consecutive steps, pinning
+      the tile index innermost): same stream bytes as the loop, but no
+      per-chunk host round-trips and the grid pipeline overlaps k-tiles.
+      ``"reference"`` runs its einsum oracle over the full width in a
+      single traversal.  ``"stable"``
+      keeps the chunked <=LANE_TILE lane chains under BOTH tilings: its
+      contract is bitwise batch-width invariance, which XLA only upholds
+      across launch widths that share codegen — a single wide trace
+      changes the tail columns' contraction by ~1 ulp (pinned by
+      tests/test_onepass.py), so for stable the two tilings are the same
+      computation and bits never move.
+    * ``k_tiling="loop"`` (legacy) — a host-side loop of sequential
+      <=LANE_TILE-wide launches, the tile stream re-read once per chunk:
+      ceil(k / 128) passes.  Kept as the equivalence baseline and for the
+      bench regression gate's before/after comparison.
+
+    The contract never changes results: each strategy's lane reduction is
     per-column (elementwise across k), so a column's value — and for
-    ``"stable"`` its exact bit pattern — is independent of which chunk or
-    launch width carried it.
+    ``"stable"`` its exact bit pattern — is independent of launch width,
+    chunking, and k_tiling (tests/test_onepass.py pins this at every
+    k-bucket boundary).
     """
     k = x_blocked.shape[-1]
     if dt.data.shape[0] == 0:  # empty matrix: no tiles, Y == identity-mapped 0
         return jnp.zeros((n_rows, k), jnp.float32)
+    if k_tiling not in K_TILINGS:
+        raise ValueError(f"unknown k_tiling {k_tiling!r} (expected one of {K_TILINGS})")
     if k <= LANE_TILE:
         y_hashed = _spmm_hashed_chunk(
             dt, x_blocked, n_rowgroups=n_rowgroups, strategy=strategy,
             combine=combine, interpret=interpret,
         )
+    elif k_tiling == "grid" and strategy != "stable":
+        xw = x_blocked
+        if strategy in ("fused", "partials") and k % LANE_TILE:
+            # the 2D grid tiles k in whole lane tiles; padded columns are
+            # zero, contribute nothing, and are sliced back off below
+            xw = jnp.pad(x_blocked, ((0, 0), (0, 0), (0, -k % LANE_TILE)))
+        y_hashed = _spmm_hashed_chunk(
+            dt, xw, n_rowgroups=n_rowgroups, strategy=strategy,
+            combine=combine, interpret=interpret,
+        )[..., :k]
     else:
         chunks = [
             _spmm_hashed_chunk(
@@ -283,8 +328,17 @@ def hbp_spmv(
     n_rowgroups: int | None = None,
     n_rows: int | None = None,
     col_block: int | None = None,
+    k_tiling: Literal["grid", "loop"] = "grid",
 ) -> jax.Array:
-    """HBP SpMV: ``y = A @ x`` with A in HBP tile format."""
+    """HBP SpMV: ``y = A @ x`` with A in HBP tile format.
+
+    ``k_tiling`` is accepted for meta-dict uniformity with
+    :func:`hbp_spmm` (a serving plan passes one keyword set to both);
+    a single vector never spans more than one lane tile, so both
+    contracts are the same launch here.
+    """
+    if k_tiling not in K_TILINGS:
+        raise ValueError(f"unknown k_tiling {k_tiling!r} (expected one of {K_TILINGS})")
     x = jnp.asarray(x, jnp.float32)
     dt, (n_rowgroups, n_rows, col_block) = _resolve(tiles, x, n_rowgroups, n_rows, col_block)
     if interpret is None:
@@ -306,9 +360,9 @@ def bucket_k(k: int, buckets: tuple = K_BUCKETS) -> int:
 
     A request is never clamped down to the top bucket: k = 300 over the
     default buckets pads up to 384 (three 128-wide lane tiles), and
-    ``hbp_spmm_bucketed`` slices the real columns back out — the lane-tiled
-    k loop in ``_hbp_spmm_device`` serves each 128-wide chunk on the fast
-    path.  Rounding to top-bucket multiples keeps the compile count
+    ``hbp_spmm_bucketed`` slices the real columns back out — the 2D k-tiled
+    grid in ``_hbp_spmm_device`` serves every 128-wide k-tile in one
+    tile-stream pass.  Rounding to top-bucket multiples keeps the compile count
     bounded (one trace per multiple actually seen) while supporting
     arbitrary feature widths.
     """
@@ -353,13 +407,14 @@ def hbp_spmm_bucketed(
     return hbp_spmm(tiles, x, **kwargs)[:, :k]
 
 
-@functools.partial(jax.jit, static_argnames=("n_rowgroups", "n_rows"))
+@functools.partial(jax.jit, static_argnames=("n_rowgroups", "n_rows", "passes"))
 def _hbp_spmm_argmax_device(
     dt: DeviceTiles,
     x_blocked: jax.Array,  # f32[n_blocks, col_block, k]
     *,
     n_rowgroups: int,
     n_rows: int,
+    passes: int = 1,
 ):
     k = x_blocked.shape[-1]
     if dt.data.shape[0] == 0:  # no tiles: every row is empty
@@ -368,7 +423,12 @@ def _hbp_spmm_argmax_device(
             jnp.full((n_rows, k), -1, jnp.int32),
             jnp.zeros((n_rows, k), jnp.float32),
         )
-    y_h, idx_h, coeff_h = _ref.hbp_spmm_hashed_argmax(
+    hashed = (
+        _ref.hbp_spmm_hashed_argmax_onepass
+        if passes == 1
+        else _ref.hbp_spmm_hashed_argmax
+    )
+    y_h, idx_h, coeff_h = hashed(
         dt.rowgroup, dt.colblock, dt.data, dt.cols, x_blocked,
         n_rowgroups=n_rowgroups,
     )
@@ -387,6 +447,7 @@ def hbp_spmm_argmax(
     n_rowgroups: int | None = None,
     n_rows: int | None = None,
     col_block: int | None = None,
+    passes: Literal[1, 3] = 1,
 ):
     """Max-monoid SpMM with winner tracking: ``(y, idx, coeff)``.
 
@@ -399,12 +460,20 @@ def hbp_spmm_argmax(
     The reduction runs on the monoid-exact jnp path (the same lane chain
     as ``strategy="stable"``), so values are bitwise identical across
     batch widths and strategies.
+
+    ``passes=1`` (default) carries a paired (value, index, coefficient)
+    payload through a single tile-stream traversal
+    (:func:`repro.kernels.ref.hbp_spmm_hashed_argmax_onepass`);
+    ``passes=3`` runs the legacy three-monoid-pass recovery, kept as the
+    equivalence oracle.  Both return identical triples.
     """
+    if passes not in (1, 3):
+        raise ValueError(f"passes must be 1 or 3, got {passes!r}")
     x = jnp.asarray(x, jnp.float32)
     dt, (n_rowgroups, n_rows, col_block) = _resolve(tiles, x, n_rowgroups, n_rows, col_block)
     x_blocked = blocked_matrix(x, col_block)
     return _hbp_spmm_argmax_device(
-        dt, x_blocked, n_rowgroups=n_rowgroups, n_rows=n_rows
+        dt, x_blocked, n_rowgroups=n_rowgroups, n_rows=n_rows, passes=passes
     )
 
 
@@ -418,13 +487,18 @@ def hbp_spmm(
     n_rowgroups: int | None = None,
     n_rows: int | None = None,
     col_block: int | None = None,
+    k_tiling: Literal["grid", "loop"] = "grid",
 ) -> jax.Array:
     """HBP multi-RHS SpMM: ``Y = A (x) X`` with A in HBP tile format.
 
-    One kernel launch serves up to :data:`LANE_TILE` columns of X; wider
-    blocks tile over sequential launches (the lane-tiled k loop) — the
-    tile stream is read ceil(k/128) times instead of ``k`` times (the
-    SpMV-per-column fallback).
+    One grid step serves up to :data:`LANE_TILE` columns of X; wider
+    blocks run the one-pass geometry (``k_tiling="grid"``, default): one
+    2D k-tiled kernel launch — tile-major for ``"partials"`` (the tile
+    stream is read ONCE for all k) and k-tile-major for ``"fused"``
+    (consecutive-revisit accumulation) — or the ``"reference"`` jnp
+    path's single full-width traversal; versus the ceil(k/128) separate
+    launches of the legacy host-side chunk loop (``k_tiling="loop"``) or
+    the k reads of SpMV-per-column.
 
     ``combine`` selects the reduction monoid: ``"sum"`` is the standard
     SpMM; ``"max"`` computes ``Y[i, c] = max_j A[i, j] * X[j, c]`` over
@@ -444,4 +518,5 @@ def hbp_spmm(
         strategy=strategy,
         interpret=interpret,
         combine=combine,
+        k_tiling=k_tiling,
     )

@@ -8,6 +8,8 @@ the dense matmul and the faithful GPU-semantics implementation
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 
@@ -21,8 +23,34 @@ __all__ = [
     "tile_contrib_spmm_max",
     "hbp_spmm_hashed_max",
     "hbp_spmm_hashed_argmax",
+    "hbp_spmm_hashed_argmax_onepass",
+    "count_traversals",
     "unpermute",
 ]
+
+# Tile-stream traversal accounting.  A "traversal" is one walk over the
+# packed (data, cols) stream with its x gathers — the dominant HBM traffic
+# of every kernel in this package, and the quantity the one-pass argmax
+# exists to cut from 3 to 1.  Each lane-loop body below bumps the counter
+# once per *trace*, so callers measuring it must invoke these references
+# directly (eagerly or via a fresh trace), not through a cached jit.
+_TRAVERSALS = [0]
+
+
+def _traverse() -> None:
+    _TRAVERSALS[0] += 1
+
+
+@contextlib.contextmanager
+def count_traversals():
+    """Context manager yielding a 1-element list that, on exit, holds the
+    number of tile-stream traversals traced inside the block."""
+    start = _TRAVERSALS[0]
+    box = [0]
+    try:
+        yield box
+    finally:
+        box[0] = _TRAVERSALS[0] - start
 
 
 def tile_contrib_ref(
@@ -32,6 +60,7 @@ def tile_contrib_ref(
     x_blocked: jax.Array,  # f32[n_col_blocks, col_block]
 ) -> jax.Array:
     """Per-tile partial results [T, group] — oracle of the SpMV part."""
+    _traverse()
     segs = x_blocked[colblock]  # [T, col_block]
     T, group, lane = data.shape
     gathered = jnp.take_along_axis(
@@ -62,6 +91,7 @@ def tile_contrib_spmm_ref(
     x_blocked: jax.Array,  # f32[n_col_blocks, col_block, k]
 ) -> jax.Array:
     """Per-tile partial blocks [T, group, k] — oracle of the SpMM part."""
+    _traverse()
     segs = x_blocked[colblock]  # [T, col_block, k]
     gathered = jax.vmap(lambda s, c: s[c])(segs, cols)  # [T, group, lane, k]
     return jnp.einsum("tgl,tglk->tgk", data, gathered)
@@ -106,6 +136,7 @@ def tile_contrib_spmm_stable(
     which is what keeps this path's k-scaling near the ideal tile-stream
     amortization (the einsum oracle loses it to the blown-up intermediates).
     """
+    _traverse()
     n_cb, col_block, k = x_blocked.shape
     x_flat = x_blocked.reshape(n_cb * col_block, k)
     base = colblock[:, None] * col_block  # [T, 1] offset of each tile's segment
@@ -154,6 +185,7 @@ def tile_contrib_spmm_max(
     one form serves as reference, stable, and oracle at once (bit-exact
     under any batch width by construction).
     """
+    _traverse()
     n_cb, col_block, k = x_blocked.shape
     x_flat = x_blocked.reshape(n_cb * col_block, k)
     base = colblock[:, None] * col_block  # [T, 1] offset of each tile's segment
@@ -214,9 +246,10 @@ def hbp_spmm_hashed_argmax(
     second pass over the tile stream that reduces ``-col`` (so the max
     picks the lowest column) over the slots whose product attained ``y``,
     and a third pass that reads the winner's coefficient.  Three passes
-    keep every reduction inside the monoid the kernels already implement;
-    an on-TPU variant would carry (value, index) as a paired payload in
-    one pass (ROADMAP).
+    keep every reduction inside the monoid the kernels already implement.
+    Kept as the equivalence oracle of the production
+    :func:`hbp_spmm_hashed_argmax_onepass`, which carries (value, index,
+    coefficient) as a paired payload through a single traversal.
     """
     n_cb, col_block, k = x_blocked.shape
     x_flat = x_blocked.reshape(n_cb * col_block, k)
@@ -235,6 +268,7 @@ def hbp_spmm_hashed_argmax(
         return d, gcol, win
 
     # pass 2: lowest winning global column, as a max of the negated id
+    _traverse()
     acc = None
     for lane in range(data.shape[2]):
         d, gcol, win = lane_parts(lane)
@@ -245,6 +279,7 @@ def hbp_spmm_hashed_argmax(
     idx = jnp.where(live, -neg_idx, -1)
 
     # pass 3: the winner's stored coefficient (unique per (row, col) pair)
+    _traverse()
     idx_t = idx[rowgroup]
     acc_c = None
     for lane in range(data.shape[2]):
@@ -254,6 +289,75 @@ def hbp_spmm_hashed_argmax(
         term = jnp.where(hit, jnp.broadcast_to(d, idx_t.shape), -jnp.inf)
         acc_c = term if acc_c is None else jnp.maximum(acc_c, term)
     coeff = jax.ops.segment_max(acc_c, rowgroup, num_segments=n_rowgroups)
+    coeff = jnp.where(live, coeff, 0.0)
+    return y, idx, coeff
+
+
+def hbp_spmm_hashed_argmax_onepass(
+    rowgroup: jax.Array,
+    colblock: jax.Array,
+    data: jax.Array,
+    cols: jax.Array,
+    x_blocked: jax.Array,
+    *,
+    n_rowgroups: int,
+):
+    """One-pass argmax SpMM: the paired-payload form of
+    :func:`hbp_spmm_hashed_argmax`.
+
+    Returns the same ``(y, idx, coeff)`` triple — bitwise-identical values
+    (the value chain is the exact ``maximum`` sequence of
+    :func:`tile_contrib_spmm_max`), identical tie-breaking (lowest global
+    column) and empty-row conventions (``idx = -1``, ``coeff = 0``) — but
+    walks the tile stream ONCE: each lane step advances a paired
+    ``(value, index, coefficient)`` payload through the max combine, where
+    a lane term displaces the accumulator iff its value is strictly
+    greater or equal-with-lower-column.  The per-tile payloads are then
+    reduced across each row group with segment ops over the already-
+    materialized ``[T, group, k]`` contributions — no further x gathers or
+    data reads, so tile-stream traffic is 1/3 of the three-pass oracle's.
+    """
+    _traverse()
+    n_cb, col_block, k = x_blocked.shape
+    x_flat = x_blocked.reshape(n_cb * col_block, k)
+    base = colblock[:, None] * col_block  # [T, 1]
+    int_max = jnp.iinfo(jnp.int32).max
+
+    def lane_term(lane):
+        d = data[:, :, lane, None]  # [T, group, 1]
+        gcol = (base + cols[:, :, lane])[..., None].astype(jnp.int32)
+        prod = d * x_flat[base + cols[:, :, lane]]  # [T, group, k]
+        live = d != 0
+        v = jnp.where(live, prod, -jnp.inf)
+        # dead slots carry the int32 max sentinel so the lowest-column
+        # tie-break can never select them
+        i = jnp.broadcast_to(jnp.where(live, gcol, int_max), v.shape)
+        c = jnp.broadcast_to(jnp.where(live, d, 0.0), v.shape)
+        return v, i, c
+
+    acc_v, acc_i, acc_c = lane_term(0)
+    for lane in range(1, data.shape[2]):
+        v, i, c = lane_term(lane)
+        take = (v > acc_v) | ((v == acc_v) & (i < acc_i))
+        # the value chain stays the literal maximum() sequence of the
+        # max-monoid path, so y is bitwise-identical to hashed_max
+        acc_v = jnp.maximum(acc_v, v)
+        acc_i = jnp.where(take, i, acc_i)
+        acc_c = jnp.where(take, c, acc_c)
+
+    # row-group combine of the per-tile payloads (contribution arrays
+    # only — the tile stream is not touched again)
+    y = jax.ops.segment_max(acc_v, rowgroup, num_segments=n_rowgroups)
+    attain = acc_v == y[rowgroup]  # a tile's winner attains the row max
+    idx_min = jax.ops.segment_min(
+        jnp.where(attain, acc_i, int_max), rowgroup, num_segments=n_rowgroups
+    )
+    live = idx_min < int_max  # also False for never-visited row groups
+    idx = jnp.where(live, idx_min, -1)
+    hit = attain & (acc_i == idx[rowgroup])
+    coeff = jax.ops.segment_max(
+        jnp.where(hit, acc_c, -jnp.inf), rowgroup, num_segments=n_rowgroups
+    )
     coeff = jnp.where(live, coeff, 0.0)
     return y, idx, coeff
 

@@ -30,11 +30,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.analysis.roofline import V5E, RooflineTerms, parse_collective_bytes, roofline_from_costs
+from repro.analysis.roofline import V5E, parse_collective_bytes, roofline_from_costs
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import DECODE_RULES, TRAIN_RULES, build_model, input_specs, sharding_ctx
-from repro.models.params import TRAIN_RULES_SP
 from repro.models.params import logical_spec
 from repro.optim.adamw import AdamWConfig, init_opt_state
 from repro.serve.steps import make_decode_step, make_prefill_step

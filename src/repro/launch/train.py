@@ -10,11 +10,10 @@ the production mesh (requires the corresponding device count).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.data.pipeline import DataConfig
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 
 from .layers import rope
-from .params import ParamDef, shard
+from .params import ParamDef
 
 __all__ = ["attention_defs", "attention_apply", "init_attn_cache"]
 

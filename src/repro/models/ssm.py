@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 
 from .layers import rmsnorm
-from .params import ParamDef, shard
+from .params import ParamDef
 
 __all__ = ["mamba_defs", "mamba_apply", "init_mamba_cache", "MAMBA_CACHE_LOGICAL"]
 

@@ -14,7 +14,7 @@ is ZeRO-sharded exactly like the FSDP weights.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

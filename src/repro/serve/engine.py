@@ -11,7 +11,7 @@ decode cells of the dry-run lower exactly the same ``decode_step``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 

@@ -37,6 +37,7 @@ __all__ = [
     "Probe",
     "spmm_probe",
     "cg_probe",
+    "pick_k_tiling",
     "autotune_partition",
     "DEFAULT_CACHE_DIR",
 ]
@@ -162,14 +163,28 @@ class Probe:
         return self.measure(csr, cfg, repeats)
 
 
-def spmm_probe(k: int = 8, strategy: str = "stable") -> Probe:
-    """The default serving objective: one steady-state k-wide SpMM launch."""
+def spmm_probe(k: int = 8, strategy: str = "stable", k_tiling: str = "grid") -> Probe:
+    """The default serving objective: one steady-state k-wide SpMM launch.
+
+    ``k_tiling`` selects the launch geometry the measurement runs under —
+    ``"grid"`` (the one-pass 2D k-tiled grid the plans serve by default)
+    or ``"loop"`` (the legacy chunked launches).  At k <= LANE_TILE the
+    two geometries are the same launch, so the params tuple stays the
+    historical two-element ``(k, strategy)`` and existing cache entries
+    keep satisfying (they measured the identical computation); at wider
+    k the geometries genuinely differ and ``k_tiling`` enters the
+    fingerprint, so a loop-era entry never silently ranks a grid-served
+    admission (or vice versa).
+    """
+    from repro.kernels.ops import LANE_TILE
+
+    params = (k, strategy) if k <= LANE_TILE else (k, strategy, k_tiling)
     return Probe(
         kind="spmm",
         measure=lambda csr, cfg, repeats: _measure_spmm_us(
-            csr, cfg, k, repeats, strategy
+            csr, cfg, k, repeats, strategy, k_tiling=k_tiling
         ),
-        params=(k, strategy),
+        params=params,
     )
 
 
@@ -195,7 +210,9 @@ def cg_probe(
         rng = np.random.default_rng(seed)
         shape = (csr.n_rows,) if k == 1 else (csr.n_rows, k)
         b = rng.standard_normal(shape).astype(np.float32)
-        jax_block = lambda r: r.x.block_until_ready()
+        def jax_block(r):
+            return r.x.block_until_ready()
+
         jax_block(cg(op, b, tol=0.0, maxiter=iters))  # compile outside the clock
         ts = []
         for _ in range(repeats):
@@ -208,15 +225,20 @@ def cg_probe(
 
 
 def _measure_spmm_us(
-    csr: CSRMatrix, cfg: PartitionConfig, k: int, repeats: int, strategy: str
+    csr: CSRMatrix,
+    cfg: PartitionConfig,
+    k: int,
+    repeats: int,
+    strategy: str,
+    k_tiling: str = "grid",
 ) -> float:
     """Median microseconds of one k-wide SpMM launch under ``cfg``.
 
-    ``strategy`` should be the path serving will actually run (the
-    registry passes its own), so the search ranks configs under the cost
-    model traffic pays — the jnp paths' k-scaling differs from the fused
-    kernel's, and off-TPU the kernels execute in interpret mode whose
-    timings are meaningless.
+    ``strategy`` (and ``k_tiling``) should be the path serving will
+    actually run (the registry passes its own), so the search ranks
+    configs under the cost model traffic pays — the jnp paths' k-scaling
+    differs from the fused kernel's, and off-TPU the kernels execute in
+    interpret mode whose timings are meaningless.
     """
     from repro.kernels import ops
 
@@ -227,6 +249,7 @@ def _measure_spmm_us(
         n_rows=tiles.shape[0],
         col_block=cfg.col_block,
         strategy=strategy,
+        k_tiling=k_tiling,
     )
     x = np.random.default_rng(0).standard_normal((csr.n_cols, k)).astype(np.float32)
     ops.hbp_spmm(dt, x, **meta).block_until_ready()  # compile outside the clock
@@ -236,6 +259,36 @@ def _measure_spmm_us(
         ops.hbp_spmm(dt, x, **meta).block_until_ready()
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts) * 1e6)
+
+
+def pick_k_tiling(
+    csr: CSRMatrix,
+    cfg: PartitionConfig,
+    *,
+    k: int = 256,
+    strategy: str = "stable",
+    repeats: int = 3,
+) -> str:
+    """Measured per-matrix choice between the one-pass 2D k-tiled grid and
+    the legacy chunk loop, at a wide RHS width where the two differ.
+
+    Returns ``"grid"`` or ``"loop"``, whichever served the faster launch
+    under this matrix's geometry (the registry's ``k_tiling="auto"`` calls
+    this at admission).  At k <= LANE_TILE the contracts coincide, so the
+    probe width defaults to two lane tiles; under ``strategy="stable"``
+    they are the same chunked computation at EVERY width (bitwise
+    invariance is that path's contract), so measuring would just pick by
+    noise — short-circuit to the default.
+    """
+    from repro.kernels import ops
+
+    if k <= ops.LANE_TILE or strategy == "stable":
+        return "grid"  # the contracts are the same computation here
+    times = {
+        kt: _measure_spmm_us(csr, cfg, k, repeats, strategy, k_tiling=kt)
+        for kt in ops.K_TILINGS
+    }
+    return min(times, key=times.get)
 
 
 def autotune_partition(
@@ -248,6 +301,7 @@ def autotune_partition(
     k: int = 8,
     repeats: int = 3,
     strategy: str = "stable",
+    k_tiling: str = "grid",
     probe: Optional[Probe] = None,
 ) -> AutotuneResult:
     """Pick a :class:`PartitionConfig` for ``csr``, cheapest source first.
@@ -278,7 +332,7 @@ def autotune_partition(
     cache = cache or AutotuneCache()
     key = key or matrix_hash(csr)
     if probe is None:
-        probe = spmm_probe(k=k, strategy=strategy)
+        probe = spmm_probe(k=k, strategy=strategy, k_tiling=k_tiling)
     if search:
         # materialize once: generators must survive both the fingerprint
         # and the measurement loop

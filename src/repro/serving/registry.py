@@ -53,6 +53,10 @@ class MatrixPlan:
     admissions: int = 1  # admit() calls that resolved to this plan
     strategy: str = "fused"
     interpret: Optional[bool] = None
+    # launch geometry for RHS widths beyond one lane tile: "grid" = the
+    # one-pass 2D k-tiled grid, "loop" = the legacy chunked launches
+    # (an "auto" admission resolves to whichever measured faster)
+    k_tiling: str = "grid"
     # A <-> A^T link, set by MatrixRegistry.admit_pair: the transpose
     # plan's name plus a direct reference (a symmetric matrix links to
     # itself — one residency serves both directions for free)
@@ -68,6 +72,7 @@ class MatrixPlan:
             col_block=self.cfg.col_block,
             strategy=self.strategy,
             interpret=self.interpret,
+            k_tiling=self.k_tiling,
         )
 
     def matvec(self, x) -> np.ndarray:
@@ -164,6 +169,12 @@ class MatrixRegistry:
     invariant ``"stable"`` jnp path elsewhere (off-TPU the kernels would
     run in interpret mode — slow, and ~1 ulp dependent on batch width,
     which would break the engine's coalescing-invariance guarantee).
+
+    ``k_tiling`` selects the wide-k launch geometry every plan serves:
+    ``"grid"`` (default) is the one-pass 2D k-tiled grid, ``"loop"`` the
+    legacy chunked launches, and ``"auto"`` measures both per matrix at
+    admission (:func:`repro.serving.autotune.pick_k_tiling`) so each
+    autotuned plan picks the faster contract for its own geometry.
     """
 
     def __init__(
@@ -175,18 +186,24 @@ class MatrixRegistry:
         autotune_k: int = 8,
         strategy: Optional[str] = None,
         interpret: Optional[bool] = None,
+        k_tiling: str = "grid",
         probe=None,
     ):
         if strategy is None:
             import jax
 
             strategy = "fused" if jax.default_backend() == "tpu" else "stable"
+        if k_tiling not in ("grid", "loop", "auto"):
+            raise ValueError(
+                f"unknown k_tiling {k_tiling!r} (expected grid, loop or auto)"
+            )
         self.cache = AutotuneCache(cache_dir)
         self.search = search
         self.candidates = candidates
         self.autotune_k = autotune_k
         self.strategy = strategy
         self.interpret = interpret
+        self.k_tiling = k_tiling
         self.probe = probe  # None: steady-state SpMM time (spmm_probe)
         self._plans: Dict[str, MatrixPlan] = {}
         self._by_hash: Dict[str, str] = {}
@@ -225,6 +242,9 @@ class MatrixRegistry:
         from repro.kernels import ops
 
         t0 = time.perf_counter()
+        # the measured search ranks candidates under the served contract;
+        # "auto" ranks under the default grid, then picks per matrix below
+        served_tiling = self.k_tiling if self.k_tiling != "auto" else "grid"
         if cfg is not None:
             tune_hit, tune_searched = False, False
         else:
@@ -236,10 +256,15 @@ class MatrixRegistry:
                 candidates=self.candidates,
                 k=self.autotune_k,
                 strategy=self.strategy,  # rank configs under the served path
+                k_tiling=served_tiling,
                 probe=self.probe,  # e.g. cg_probe: rank by time-to-tolerance
             )
             cfg = tuned.cfg
             tune_hit, tune_searched = tuned.cache_hit, tuned.searched
+        if self.k_tiling == "auto":
+            from .autotune import pick_k_tiling
+
+            served_tiling = pick_k_tiling(csr, cfg, strategy=self.strategy)
         tiles = build_tiles(csr, cfg)
         device = ops.device_tiles(tiles)
         diag = csr.diagonal()
@@ -262,6 +287,7 @@ class MatrixRegistry:
             autotune_searched=tune_searched,
             strategy=self.strategy,
             interpret=self.interpret,
+            k_tiling=served_tiling,
         )
         self._plans[name] = plan
         self._by_hash[key] = name
@@ -341,6 +367,7 @@ class MatrixRegistry:
                 "shape": tuple(p.shape),
                 "nnz": p.nnz,
                 "config": dataclasses.asdict(p.cfg),
+                "k_tiling": p.k_tiling,
                 "admissions": p.admissions,
                 "preprocess_s": p.preprocess_s,
                 "autotune_cache_hit": p.autotune_cache_hit,

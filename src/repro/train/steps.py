@@ -14,12 +14,11 @@ TrainState is a plain dict pytree so PartitionSpec trees mirror it 1:1.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.model import Model
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 

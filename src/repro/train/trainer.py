@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from pathlib import Path
 from typing import Callable, Dict, Optional
 
 import jax

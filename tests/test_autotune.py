@@ -8,7 +8,6 @@ cached config.
 """
 import json
 
-import numpy as np
 import pytest
 
 from repro.core import PartitionConfig, enumerate_configs

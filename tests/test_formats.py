@@ -1,6 +1,5 @@
 """CSR/COO containers and the 2D partition (paper §III-A)."""
 import numpy as np
-import pytest
 
 from conftest import hypothesis_or_shim
 

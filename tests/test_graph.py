@@ -10,7 +10,7 @@ import pytest
 
 import jax
 
-from repro.core import PartitionConfig, build_tiles, csr_from_dense
+from repro.core import PartitionConfig, build_tiles
 from repro.core.formats import CSRMatrix
 from repro.graph import (
     add_self_loops,

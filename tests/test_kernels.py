@@ -9,11 +9,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-import jax.numpy as jnp
 
 from repro.core import PartitionConfig, build_tiles, csr_from_dense
 from repro.kernels import hbp_spmv
-from repro.kernels.ref import tile_contrib_ref, unpermute
 
 
 CASES = [

@@ -1,5 +1,4 @@
 """Loss formulation and logical sharding rules."""
-import numpy as np
 
 import jax
 import jax.numpy as jnp

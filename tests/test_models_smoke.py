@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.models import build_model

@@ -15,7 +15,7 @@ from repro.optim.adamw import (
     init_opt_state,
     lr_schedule,
 )
-from repro.train.steps import init_train_state, loss_fn, make_train_step
+from repro.train.steps import init_train_state, make_train_step
 
 
 def test_quantize_roundtrip_error(rng):

@@ -4,7 +4,6 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import (

@@ -15,7 +15,7 @@ given, settings, st = hypothesis_or_shim()
 
 from repro.core.formats import csr_from_dense
 from repro.graph import graph_from_edges, power_law_graph
-from repro.graph.train import SampledSubgraph, sample_neighbors, subgraph
+from repro.graph.train import sample_neighbors, subgraph
 
 
 def _random_graph(n, density, seed):

@@ -3,7 +3,6 @@ serving engine, sparse-linear pruned layers."""
 import dataclasses
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
