@@ -1,0 +1,117 @@
+"""Observability overhead: what does instrumentation cost when it's on/off?
+
+The obs layer promises "off by default, free when off".  This bench holds
+it to that with three measurements:
+
+* ``obs/serve_disabled`` vs ``obs/serve_enabled`` — the serving hot loop
+  (submit → poll → flush over an admitted suite matrix) timed with the
+  gated instrumentation compiled out vs fully live (spans + counters +
+  gauges + histograms).  ``overhead`` in the derived column is the
+  enabled/disabled median ratio; the CI smoke gate runs the *disabled*
+  configuration against ``baseline.json``, so any cost on the default
+  path fails the existing regression pipeline.
+* ``obs/counter`` / ``obs/span`` — per-op microcosts of one labelled
+  counter increment and one empty span, enabled and disabled, so a
+  regression in the primitives is visible before it shows up in the
+  engine numbers.
+
+All timings restore the obs enable state they found, and the registries
+are reset afterwards so a ``--trace`` run's artifact is not polluted by
+benchmark-loop spans.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import obs
+from repro.serving import MatrixRegistry, ServingEngine
+
+from .common import emit, load_suite, timeit
+
+_MICRO_OPS = 10_000
+
+
+def _serve_cycle(engine: ServingEngine, key: str, xs, vclock) -> None:
+    """One hot-loop pass: every request submitted, coalesced, flushed."""
+    for i, x in enumerate(xs):
+        vclock[0] = 1e-5 * i
+        engine.submit(key, x)
+        engine.poll()
+    vclock[0] = 1e-5 * len(xs) + engine.batcher.max_wait_s
+    engine.poll()
+    engine.flush()
+
+
+def _time_serving(csr, name: str, n_req: int, repeats: int) -> float:
+    reg = MatrixRegistry(search=False, cache_dir=".hbp_autotune")
+    plan = reg.admit(csr, name)
+    rng = np.random.default_rng(2)
+    xs = [rng.standard_normal(csr.n_cols).astype(np.float32) for _ in range(n_req)]
+    # warm per-bucket compiles outside the timed region
+    for k in (1, 2, 4, 8, 16):
+        plan.matmat(np.zeros((csr.n_cols, k), np.float32)).block_until_ready()
+    vclock = [0.0]
+    eng = ServingEngine(reg, max_wait_s=0.002, clock=lambda: vclock[0])
+    return timeit(lambda: _serve_cycle(eng, name, xs, vclock), repeats=repeats)
+
+
+def _with_obs(flag: bool, fn):
+    was = obs.enabled()
+    (obs.enable if flag else obs.disable)()
+    try:
+        return fn()
+    finally:
+        (obs.enable if was else obs.disable)()
+
+
+def _micro_counter() -> None:
+    c = obs.counter("bench.obs_micro", site="counter")
+    for _ in range(_MICRO_OPS):
+        c.inc()
+
+
+def _micro_span() -> None:
+    for _ in range(_MICRO_OPS):
+        with obs.span("bench.obs_micro_span"):
+            pass
+
+
+def main(full: bool = False) -> None:
+    n_req = 256 if full else 64
+    repeats = 7 if full else 5
+    name, csr = next(iter(load_suite(False).items()))  # smallest suite matrix
+
+    t_off = _with_obs(False, lambda: _time_serving(csr, name, n_req, repeats))
+    t_on = _with_obs(True, lambda: _time_serving(csr, name, n_req, repeats))
+    overhead = t_on.stats["median_us"] / t_off.stats["median_us"]
+    emit(
+        f"obs/serve_disabled/{name}",
+        t_off,
+        f"req_per_s={n_req / float(t_off):.1f}",
+        config={"n_req": n_req},
+    )
+    emit(
+        f"obs/serve_enabled/{name}",
+        t_on,
+        f"req_per_s={n_req / float(t_on):.1f} overhead={overhead:.3f}x",
+        config={"n_req": n_req},
+    )
+
+    for site, fn in (("counter", _micro_counter), ("span", _micro_span)):
+        for flag in (False, True):
+            t = _with_obs(flag, lambda: timeit(fn, repeats=repeats))
+            state = "enabled" if flag else "disabled"
+            emit(
+                f"obs/{site}_{state}",
+                float(t) / _MICRO_OPS,
+                f"ns_per_op={1e9 * float(t) / _MICRO_OPS:.0f}",
+                config={"ops": _MICRO_OPS},
+            )
+
+    # don't leak benchmark-loop metrics/spans into a --trace artifact
+    if not obs.enabled():
+        obs.reset()
+
+
+if __name__ == "__main__":
+    main()

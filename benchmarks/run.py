@@ -22,7 +22,7 @@ def main() -> None:
         "--only",
         default=None,
         help="comma list: stddev,preprocess,spmv,spmm,combine,memtraffic,"
-        "schedule,roofline,solvers,traffic,gnn,gnn_train",
+        "schedule,roofline,solvers,traffic,gnn,gnn_train,obs",
     )
     ap.add_argument(
         "--json",
@@ -30,13 +30,23 @@ def main() -> None:
         metavar="PATH",
         help="write structured per-bench records (median/p50/p99 µs) to PATH",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="PATH",
+        help="enable repro.obs for the run and write a Chrome-trace JSON "
+        "(load in Perfetto / chrome://tracing) of the benchmark's spans",
+    )
     args = ap.parse_args()
+
+    from repro import obs
 
     from . import (
         bench_combine,
         bench_gnn,
         bench_gnn_train,
         bench_memtraffic,
+        bench_obs,
         bench_preprocess,
         bench_roofline,
         bench_schedule,
@@ -61,6 +71,7 @@ def main() -> None:
         "traffic": bench_traffic.main,      # serving engine (beyond-paper)
         "gnn": bench_gnn.main,              # graph aggregation (beyond-paper)
         "gnn_train": bench_gnn_train.main,  # differentiable fwd+bwd step
+        "obs": bench_obs.main,              # instrumentation overhead guard
     }
     if args.only:
         selected = [s.strip() for s in args.only.split(",") if s.strip()]
@@ -72,6 +83,8 @@ def main() -> None:
             )
     else:
         selected = list(benches)
+    if args.trace:
+        obs.enable()
     print("name,us_per_call,derived")
     ok = True
     for name in selected:
@@ -81,6 +94,9 @@ def main() -> None:
             ok = False
             print(f"{name},0,ERROR", file=sys.stderr)
             traceback.print_exc()
+    if args.trace:
+        obs.write_trace(args.trace)
+        print(f"wrote Chrome trace to {args.trace}", file=sys.stderr)
     if args.json:
         payload = {
             "schema": 1,

@@ -8,9 +8,21 @@ burst of mixed requests through the micro-batching ServingEngine, checks
 every answer bitwise against a sequential per-request SpMV, and prints the
 engine's instrumentation — including how far the traffic has amortized the
 one-time HBP preprocessing cost.
+
+With observability on::
+
+    REPRO_OBS=1 PYTHONPATH=src python examples/serve_spmv.py
+
+it additionally writes ``serve_trace.json`` (Chrome-trace JSON — open at
+https://ui.perfetto.dev to see the nested admit/flush spans),
+``serve_obs.json`` (the full metrics snapshot, re-renderable with
+``python -m repro.analysis.report --obs serve_obs.json``), and prints the
+text dashboard: registry hit/miss counters, batch-width histograms, and
+the per-matrix amortized-preprocess ledger.
 """
 import numpy as np
 
+from repro import obs
 from repro.core import spmv
 from repro.core.matrices import banded_fem, circuit
 from repro.core.partition import enumerate_configs
@@ -35,6 +47,11 @@ def main() -> None:
               f"searched={plan_a.autotune_searched} cfg=({plan_a.cfg.row_block},"
               f"{plan_a.cfg.col_block},{plan_a.cfg.group},{plan_a.cfg.lane}) "
               f"preprocess={plan_a.preprocess_s:.2f}s")
+
+    # identical content re-admitted into the live registry is a pure hit —
+    # no tiles rebuilt, just the hit/admission counters moving
+    assert registry.admit(A, "circuit") is plan_a
+    assert plan_a.admissions == 2
 
     engine = ServingEngine(registry, max_wait_s=0.002)
     rng = np.random.default_rng(0)
@@ -64,6 +81,15 @@ def main() -> None:
             f"p50={1e3 * s['latency_p50_s']:.1f}ms p99={1e3 * s['latency_p99_s']:.1f}ms "
             f"amortized_preprocess={1e3 * s['amortized_preprocess_s']:.1f}ms/req"
         )
+
+    if obs.enabled():
+        obs.write_trace("serve_trace.json")
+        snap = obs.dump("serve_obs.json")
+        print(
+            f"\n[obs] wrote serve_trace.json ({snap['n_events']} span events, "
+            "open at https://ui.perfetto.dev) and serve_obs.json"
+        )
+        print(obs.report())
     print("ok")
 
 

@@ -1,6 +1,12 @@
 """Render EXPERIMENTS.md §Roofline/§Dry-run tables from the sweep JSONs.
 
     PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+
+``--obs PATH`` switches modes: re-render the text dashboard from a
+``repro.obs.dump()`` snapshot instead (counters, histograms, span
+aggregates, amortized-preprocess ledger)::
+
+    PYTHONPATH=src python -m repro.analysis.report --obs obs.json
 """
 from __future__ import annotations
 
@@ -101,7 +107,18 @@ def fleet_stats(recs) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument(
+        "--obs",
+        default=None,
+        metavar="PATH",
+        help="render the dashboard from a repro.obs.dump() snapshot instead",
+    )
     args = ap.parse_args()
+    if args.obs:
+        from repro.obs.report import render
+
+        print(render(json.loads(Path(args.obs).read_text())))
+        return
     recs = load(Path(args.dir))
     print("## §Roofline (single-pod 16×16, per-device per-step seconds)\n")
     print(roofline_table(recs))

@@ -85,7 +85,16 @@ def build_hbp(
     or "none" — the same format built on a different permutation, which is
     how the preprocessing benchmark compares strategies like-for-like.
     """
+    from repro import obs
+
     cfg = cfg or PartitionConfig()
+    with obs.span("admit.build_hbp", method=method, nnz=csr.nnz, warp=warp):
+        return _build_hbp_impl(csr, cfg, warp, method)
+
+
+def _build_hbp_impl(
+    csr: CSRMatrix, cfg: PartitionConfig, warp: int, method: str
+) -> HBPMatrix:
     part = Partition2D.build(csr, cfg)
     nbr, nbc = part.grid
     R = cfg.row_block

@@ -152,17 +152,25 @@ class Partition2D:
 
     @classmethod
     def build(cls, csr: CSRMatrix, cfg: PartitionConfig | None = None) -> "Partition2D":
+        from repro import obs
+
         cfg = cfg or PartitionConfig()
-        counts = count_block_nnz(csr, cfg)
-        nbr, nbc = cfg.grid(csr.shape)
-        # per-block totals: sum counts over the rows of each row block
-        n_rows = csr.n_rows
-        pad_rows = nbr * cfg.row_block - n_rows
-        padded = np.pad(counts, ((0, pad_rows), (0, 0)))
-        block_tot = padded.reshape(nbr, cfg.row_block, nbc).sum(axis=1)
-        begin = np.zeros(nbr * nbc + 1, dtype=np.int64)
-        np.cumsum(block_tot.reshape(-1), out=begin[1:])
-        perm = block_entry_order(csr, cfg)
+        with obs.span(
+            "admit.partition",
+            row_block=cfg.row_block,
+            col_block=cfg.col_block,
+            nnz=csr.nnz,
+        ):
+            counts = count_block_nnz(csr, cfg)
+            nbr, nbc = cfg.grid(csr.shape)
+            # per-block totals: sum counts over the rows of each row block
+            n_rows = csr.n_rows
+            pad_rows = nbr * cfg.row_block - n_rows
+            padded = np.pad(counts, ((0, pad_rows), (0, 0)))
+            block_tot = padded.reshape(nbr, cfg.row_block, nbc).sum(axis=1)
+            begin = np.zeros(nbr * nbc + 1, dtype=np.int64)
+            np.cumsum(block_tot.reshape(-1), out=begin[1:])
+            perm = block_entry_order(csr, cfg)
         return cls(csr, cfg, counts, begin, perm)
 
     @property

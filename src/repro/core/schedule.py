@@ -101,6 +101,28 @@ def mixed_schedule(
     the (row-block, col-block) grid; ``n_cols`` is the number of column
     blocks — needed to group same-column blocks in the fixed phase.
     """
+    from repro import obs
+
+    with obs.span(
+        "admit.schedule", blocks=int(costs.size), workers=n_workers
+    ) as sp:
+        sched = _mixed_schedule_impl(
+            costs, n_workers, n_cols=n_cols, fixed_fraction=fixed_fraction
+        )
+        sp.annotate(makespan_ratio=round(sched.makespan_ratio, 4))
+    if obs.enabled():
+        obs.gauge("schedule.makespan_ratio").set(sched.makespan_ratio)
+        obs.counter("schedule.builds").inc()
+    return sched
+
+
+def _mixed_schedule_impl(
+    costs: np.ndarray,
+    n_workers: int,
+    *,
+    n_cols: int | None = None,
+    fixed_fraction: float = 0.7,
+) -> Schedule:
     n = costs.size
     ids = np.arange(n)
     if n_cols:

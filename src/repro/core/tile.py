@@ -31,6 +31,8 @@ from typing import Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .formats import CSRMatrix
 from .hash import sample_params
 from .partition import Partition2D, PartitionConfig
@@ -88,6 +90,26 @@ def build_tiles(
     kernel's gather-multiply contributes nothing.
     """
     cfg = cfg or PartitionConfig()
+    with obs.span(
+        "admit.build_tiles", method=method, n_rows=csr.shape[0], nnz=csr.nnz
+    ) as sp:
+        tiles = _build_tiles_impl(csr, cfg, method)
+        sp.annotate(
+            tiles=tiles.n_tiles, nnz_utilization=round(tiles.nnz_utilization(), 4)
+        )
+    if obs.enabled():
+        obs.counter("admit.tile_builds").inc()
+        obs.counter("admit.tiles_built").inc(tiles.n_tiles)
+        obs.histogram("admit.nnz_utilization").observe(tiles.nnz_utilization())
+        # padding is the TPU adaptation's cost model: zero slots streamed
+        # from HBM for nothing — the quantity the hash exists to minimize
+        obs.counter("admit.padded_slots").inc(
+            tiles.data.size - int(np.count_nonzero(tiles.data))
+        )
+    return tiles
+
+
+def _build_tiles_impl(csr: CSRMatrix, cfg: PartitionConfig, method: str) -> HBPTiles:
     part = Partition2D.build(csr, cfg)
     nbr, nbc = part.grid
     R, G, LANE = cfg.row_block, cfg.group, cfg.lane
@@ -111,48 +133,50 @@ def build_tiles(
         # row order must be consistent across the column blocks that
         # accumulate into it.  The hash input is the row's total nnz in the
         # block row — the same quantity Algorithm 2 accumulates.
-        if method == "hash":
-            params = sample_params(row_tot, table_size=R)
-            perm = REORDER_METHODS["hash"](row_tot, params)
-        else:
-            perm = reorder(row_tot)
+        with obs.span("admit.hash", row_block=bi, method=method):
+            if method == "hash":
+                params = sample_params(row_tot, table_size=R)
+                perm = REORDER_METHODS["hash"](row_tot, params)
+            else:
+                perm = reorder(row_tot)
         perm_global[bi * R : (bi + 1) * R] = perm + lo
         nnz_hashed = counts[perm]  # [R, nbc]
 
-        for bj in range(nbc):
-            if part.block_nnz()[bi, bj] == 0:
-                continue
-            rows, cols, vals = part.block_entries(bi, bj)
-            inv = np.empty(R, dtype=np.int64)
-            inv[perm] = np.arange(R)
-            row_pos = inv[rows]
-            order = np.lexsort((cols, row_pos))
-            row_pos, cols, vals = row_pos[order], cols[order], vals[order]
-            nnzb = nnz_hashed[:, bj]
-            starts = np.zeros(R + 1, dtype=np.int64)
-            np.cumsum(nnzb, out=starts[1:])
-            k = np.arange(vals.size) - starts[row_pos]
-            grp = row_pos // G
-            sub = row_pos % G
-            # tiles per group: ceil(group max nnz / LANE)
-            gmax = np.zeros(gpb, dtype=np.int64)
-            np.maximum.at(gmax, grp, nnzb[row_pos])
-            ntile = -(-gmax // LANE)  # 0 for empty groups
-            tile_base = np.zeros(gpb + 1, dtype=np.int64)
-            np.cumsum(ntile, out=tile_base[1:])
-            total = int(tile_base[-1])
-            if total == 0:
-                continue
-            dblk = np.zeros((total, G, LANE), dtype=np.float32)
-            cblk = np.zeros((total, G, LANE), dtype=np.int32)
-            t_idx = tile_base[grp] + k // LANE
-            dblk[t_idx, sub, k % LANE] = vals.astype(np.float32)
-            cblk[t_idx, sub, k % LANE] = cols.astype(np.int32)
-            tiles_data.append(dblk)
-            tiles_cols.append(cblk)
-            g_of_tile = np.repeat(np.arange(gpb), ntile)
-            t_rowgroup.append(bi * gpb + g_of_tile)
-            t_colblock.append(np.full(total, bj, dtype=np.int64))
+        with obs.span("admit.pack_tiles", row_block=bi):
+            for bj in range(nbc):
+                if part.block_nnz()[bi, bj] == 0:
+                    continue
+                rows, cols, vals = part.block_entries(bi, bj)
+                inv = np.empty(R, dtype=np.int64)
+                inv[perm] = np.arange(R)
+                row_pos = inv[rows]
+                order = np.lexsort((cols, row_pos))
+                row_pos, cols, vals = row_pos[order], cols[order], vals[order]
+                nnzb = nnz_hashed[:, bj]
+                starts = np.zeros(R + 1, dtype=np.int64)
+                np.cumsum(nnzb, out=starts[1:])
+                k = np.arange(vals.size) - starts[row_pos]
+                grp = row_pos // G
+                sub = row_pos % G
+                # tiles per group: ceil(group max nnz / LANE)
+                gmax = np.zeros(gpb, dtype=np.int64)
+                np.maximum.at(gmax, grp, nnzb[row_pos])
+                ntile = -(-gmax // LANE)  # 0 for empty groups
+                tile_base = np.zeros(gpb + 1, dtype=np.int64)
+                np.cumsum(ntile, out=tile_base[1:])
+                total = int(tile_base[-1])
+                if total == 0:
+                    continue
+                dblk = np.zeros((total, G, LANE), dtype=np.float32)
+                cblk = np.zeros((total, G, LANE), dtype=np.int32)
+                t_idx = tile_base[grp] + k // LANE
+                dblk[t_idx, sub, k % LANE] = vals.astype(np.float32)
+                cblk[t_idx, sub, k % LANE] = cols.astype(np.int32)
+                tiles_data.append(dblk)
+                tiles_cols.append(cblk)
+                g_of_tile = np.repeat(np.arange(gpb), ntile)
+                t_rowgroup.append(bi * gpb + g_of_tile)
+                t_colblock.append(np.full(total, bj, dtype=np.int64))
 
     if tiles_data:
         data = np.concatenate(tiles_data)

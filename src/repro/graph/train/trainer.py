@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.formats import CSRMatrix
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 
@@ -160,6 +161,18 @@ class NodeClassifierTrainer:
             "lr": float(metrics["lr"]),
             "step": int(metrics["step"]),
         }
+        if obs.enabled():
+            # the step dict already forced these to host floats, so the
+            # streams cost no extra syncs; indexed by optimizer step
+            i = out["step"]
+            obs.series("train.loss", model=self.model).append(out["loss"], index=i)
+            obs.series("train.grad_norm", model=self.model).append(
+                out["grad_norm"], index=i
+            )
+            obs.series("train.accuracy", model=self.model).append(
+                out["accuracy"], index=i
+            )
+            obs.counter("train.steps", model=self.model).inc()
         return TrainState(params, opt_state), out
 
     def evaluate(self, state: TrainState, agg, x, labels, mask=None) -> Dict[str, float]:

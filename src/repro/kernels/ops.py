@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.tile import HBPTiles
 
 from . import hbp_spmv as _k
@@ -109,6 +110,71 @@ def _default_interpret() -> bool:
     # Pallas TPU kernels execute natively on TPU; everywhere else we run the
     # kernel body in interpret mode (bit-accurate, Python-evaluated).
     return jax.default_backend() != "tpu"
+
+
+def stream_passes(k: int, strategy: str, k_tiling: str) -> int:
+    """How many times one launch walks the packed tile stream.
+
+    The structural quantity behind the HBM traffic model (and what
+    ``ref.count_traversals`` counts on the jnp references): at
+    ``k <= LANE_TILE`` every contract is a single traversal; wider k reads
+    the stream once under the one-pass geometries (``"grid"`` partials —
+    block maps depend only on the tile index — and the references' single
+    full-width trace) and once per 128-wide k-tile everywhere else (the
+    fused k-tile-major grid's revisits, the legacy chunk loop, and the
+    ``"stable"`` path's chunked lane chains under both tilings).
+    """
+    if k <= LANE_TILE:
+        return 1
+    if k_tiling == "grid" and strategy in ("partials", "reference"):
+        return 1
+    return -(-k // LANE_TILE)
+
+
+def modeled_launch_bytes(
+    dt: DeviceTiles, k: int, strategy: str, k_tiling: str
+) -> int:
+    """Modeled HBM bytes one SpMM launch moves (the bandwidth ledger).
+
+    Tile stream (data f32 + cols i32) and the gathered x values are paid
+    once per stream pass; the output block is written once.  A *model*,
+    not a measurement: it assumes no cache reuse across passes (the
+    pessimistic bound ``bench_memtraffic`` compares against) — useful for
+    attributing relative traffic across strategies and k-tilings, which
+    is exactly what Gao et al. identify as the binding constraint.
+    """
+    passes = stream_passes(k, strategy, k_tiling)
+    stream = dt.data.nbytes + dt.cols.nbytes  # the packed tile arrays
+    gathers = dt.data.size * 4  # one f32 x gather per tile slot
+    n_rowgroups, group = dt.visited.shape[0], dt.data.shape[1] if dt.data.ndim == 3 else 8
+    out = n_rowgroups * group * max(k, 1) * 4
+    return int(passes * (stream + gathers) + out)
+
+
+def _record_launch(
+    dt: DeviceTiles, k: int, *, op: str, strategy: str, k_tiling: str,
+    combine: str = "sum", passes: int | None = None,
+) -> None:
+    """Gated kernel-traffic accounting: one bump per *Python-level* launch.
+
+    Calls traced inside an outer ``jit`` (e.g. the solver ``while_loop``
+    body) are counted once per trace, not once per device execution — the
+    counters see what Python dispatches, which is the honest observable
+    from this layer.
+    """
+    if not obs.enabled():
+        return
+    obs.counter(
+        "kernels.launches", op=op, strategy=strategy, k_tiling=k_tiling,
+        combine=combine,
+    ).inc()
+    n_passes = stream_passes(k, strategy, k_tiling) if passes is None else passes
+    obs.counter("kernels.traversals").inc(n_passes)
+    obs.counter("kernels.bytes_modeled").inc(
+        modeled_launch_bytes(dt, k, strategy, k_tiling)
+    )
+    obs.counter("kernels.k_tiling", choice=k_tiling).inc()
+    obs.histogram("kernels.launch_k").observe(k)
 
 
 @functools.partial(
@@ -343,6 +409,7 @@ def hbp_spmv(
     dt, (n_rowgroups, n_rows, col_block) = _resolve(tiles, x, n_rowgroups, n_rows, col_block)
     if interpret is None:
         interpret = _default_interpret()
+    _record_launch(dt, 1, op="spmv", strategy=strategy, k_tiling=k_tiling)
     x_blocked = blocked_vector(x, col_block)
     return _hbp_spmv_device(
         dt,
@@ -471,6 +538,10 @@ def hbp_spmm_argmax(
         raise ValueError(f"passes must be 1 or 3, got {passes!r}")
     x = jnp.asarray(x, jnp.float32)
     dt, (n_rowgroups, n_rows, col_block) = _resolve(tiles, x, n_rowgroups, n_rows, col_block)
+    _record_launch(
+        dt, x.shape[1], op="spmm_argmax", strategy="stable", k_tiling="grid",
+        combine="max", passes=passes,
+    )
     x_blocked = blocked_matrix(x, col_block)
     return _hbp_spmm_argmax_device(
         dt, x_blocked, n_rowgroups=n_rowgroups, n_rows=n_rows, passes=passes
@@ -509,6 +580,10 @@ def hbp_spmm(
     dt, (n_rowgroups, n_rows, col_block) = _resolve(tiles, x, n_rowgroups, n_rows, col_block)
     if interpret is None:
         interpret = _default_interpret()
+    _record_launch(
+        dt, x.shape[1], op="spmm", strategy=strategy, k_tiling=k_tiling,
+        combine=combine,
+    )
     x_blocked = blocked_matrix(x, col_block)
     return _hbp_spmm_device(
         dt,

@@ -1,0 +1,186 @@
+"""Span tracer: nested timing scopes exported as Chrome-trace / JSONL.
+
+``span("admit.build_tiles")`` opens a timed scope; on exit one *complete*
+event (Chrome ``"ph": "X"``) is appended to the process-global
+:class:`Tracer`.  Nesting needs no bookkeeping in the export — the Chrome
+trace viewer and Perfetto nest same-thread events by time containment —
+but each event also carries an explicit ``depth`` (the thread's open-span
+count at entry) so tests and the JSONL log can assert ordering without a
+trace viewer.
+
+Device work is asynchronous under JAX: a span that closes right after a
+kernel launch times the *dispatch*, not the compute.  ``Span.sync(value)``
+wraps ``jax.block_until_ready`` so the caller decides, per span, whether
+the device is drained inside the measurement::
+
+    with obs.span("serve.flush", matrix=key) as sp:
+        y = sp.sync(plan.matmat(X))   # compute lands inside the span
+
+The event buffer is bounded (default 1M events); past the cap events are
+dropped and counted, never silently lost.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+__all__ = ["Span", "Tracer", "get_tracer"]
+
+
+class Tracer:
+    """Bounded event buffer with Chrome-trace and JSONL exporters."""
+
+    def __init__(self, *, max_events: int = 1_000_000):
+        self.max_events = max_events
+        self.epoch = time.perf_counter()
+        self.events: List[dict] = []
+        self.dropped = 0
+        self._lock = threading.Lock()
+        self._tls = threading.local()
+
+    # --- span lifecycle ----------------------------------------------------
+
+    def span(self, name: str, **args) -> "Span":
+        return Span(self, name, args)
+
+    def _depth(self) -> int:
+        return getattr(self._tls, "depth", 0)
+
+    def _enter(self) -> int:
+        d = self._depth()
+        self._tls.depth = d + 1
+        return d
+
+    def _exit(self) -> None:
+        self._tls.depth = max(0, self._depth() - 1)
+
+    def add_event(
+        self, name: str, t0: float, t1: float, depth: int, args: Dict[str, object]
+    ) -> None:
+        ev = {
+            "name": name,
+            "ph": "X",
+            "ts": (t0 - self.epoch) * 1e6,  # Chrome trace wants microseconds
+            "dur": (t1 - t0) * 1e6,
+            "pid": os.getpid(),
+            "tid": threading.get_ident(),
+            "depth": depth,
+        }
+        if args:
+            ev["args"] = {k: _jsonable(v) for k, v in args.items()}
+        with self._lock:
+            if len(self.events) >= self.max_events:
+                self.dropped += 1
+            else:
+                self.events.append(ev)
+
+    # --- introspection / export --------------------------------------------
+
+    def snapshot(self) -> List[dict]:
+        with self._lock:
+            return list(self.events)
+
+    def clear(self) -> None:
+        with self._lock:
+            self.events.clear()
+            self.dropped = 0
+
+    def summary(self) -> List[dict]:
+        """Per-span-name aggregate: count, total/mean/max duration (ms)."""
+        agg: Dict[str, List[float]] = {}
+        for ev in self.snapshot():
+            agg.setdefault(ev["name"], []).append(ev["dur"])
+        out = []
+        for name in sorted(agg, key=lambda n: -sum(agg[n])):
+            durs = agg[name]
+            out.append(
+                {
+                    "name": name,
+                    "count": len(durs),
+                    "total_ms": sum(durs) / 1e3,
+                    "mean_ms": sum(durs) / len(durs) / 1e3,
+                    "max_ms": max(durs) / 1e3,
+                }
+            )
+        return out
+
+    def chrome_trace(self) -> dict:
+        """The ``{"traceEvents": [...]}`` object Perfetto / chrome://tracing
+        load directly."""
+        return {
+            "traceEvents": self.snapshot(),
+            "displayTimeUnit": "ms",
+            "otherData": {"dropped_events": self.dropped},
+        }
+
+    def write_chrome(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+
+    def write_jsonl(self, path) -> None:
+        """One event object per line — greppable, streamable, diffable."""
+        with open(path, "w") as f:
+            for ev in self.snapshot():
+                f.write(json.dumps(ev, sort_keys=True) + "\n")
+
+
+def _jsonable(v):
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return repr(v)
+
+
+class Span:
+    """One timed scope.  Use as a context manager; re-entrant per instance
+    is not supported (make a new span instead)."""
+
+    __slots__ = ("tracer", "name", "args", "t0", "depth")
+
+    def __init__(self, tracer: Tracer, name: str, args: Dict[str, object]):
+        self.tracer = tracer
+        self.name = name
+        self.args = args
+
+    def __enter__(self) -> "Span":
+        self.depth = self.tracer._enter()
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        t1 = time.perf_counter()
+        self.tracer._exit()
+        if exc_type is not None:
+            self.args.setdefault("error", exc_type.__name__)
+        self.tracer.add_event(self.name, self.t0, t1, self.depth, self.args)
+        return False
+
+    def annotate(self, **kw) -> "Span":
+        """Attach args discovered mid-span (tile counts, chosen configs)."""
+        self.args.update(kw)
+        return self
+
+    def sync(self, value):
+        """Block until ``value``'s device work is done; returns ``value``.
+        Use inside the span so asynchronous dispatch lands in the timing."""
+        import jax
+
+        return jax.block_until_ready(value)
+
+
+_TRACER: Optional[Tracer] = None
+_TRACER_LOCK = threading.Lock()
+
+
+def get_tracer() -> Tracer:
+    """The process-global tracer (created on first use)."""
+    global _TRACER
+    with _TRACER_LOCK:
+        if _TRACER is None:
+            _TRACER = Tracer()
+        return _TRACER

@@ -26,6 +26,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.formats import CSRMatrix
 from repro.core.partition import PartitionConfig, enumerate_configs
 from repro.core.tile import build_tiles, tuned_partition_config
@@ -362,10 +363,21 @@ def autotune_partition(
         )
 
     best_cfg, best_us = None, float("inf")
-    for cand in candidates:
-        us = probe(csr, cand, repeats)
-        if us < best_us:
-            best_cfg, best_us = cand, us
+    with obs.span(
+        "serve.autotune", probe=probe.kind, candidates=len(candidates)
+    ) as search_sp:
+        for cand in candidates:
+            with obs.span(
+                "serve.autotune_trial",
+                row_block=cand.row_block,
+                col_block=cand.col_block,
+                lane=cand.lane,
+            ) as sp:
+                us = probe(csr, cand, repeats)
+                sp.annotate(objective_us=round(us, 1))
+            if us < best_us:
+                best_cfg, best_us = cand, us
+        search_sp.annotate(best_us=round(best_us, 1))
     if best_cfg is None:  # empty candidate list: fall back to the heuristic
         return autotune_partition(csr, key=key, cache=cache, search=False)
     cache.put(

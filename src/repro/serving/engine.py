@@ -14,16 +14,21 @@ fully deterministic flush decisions.
 Instrumentation is part of the contract: per matrix the engine counts
 requests, batches, k-bucket occupancy and padding, p50/p99 request
 latency, per-batch compute seconds, and the admission cost still
-unamortized — :meth:`ServingEngine.stats` snapshots all of it.
+unamortized — :meth:`ServingEngine.stats` snapshots all of it.  The
+backing store is the registry's shared
+:class:`~repro.obs.metrics.MetricRegistry` (one ledger for admission and
+traffic; ``stats()`` is a view over it), and with ``repro.obs`` enabled
+the hot loop additionally emits flush spans, flush-reason counters,
+queue-depth gauges and deadline-miss counts.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
-from typing import Dict, Optional
+from typing import Optional
 
 import numpy as np
 
+from repro import obs
 from repro.kernels.ops import K_BUCKETS, bucket_k
 
 from .batcher import MicroBatcher, SpMVRequest
@@ -66,16 +71,6 @@ class Ticket:
 _LATENCY_WINDOW = 4096
 
 
-class _MatrixCounters:
-    def __init__(self) -> None:
-        self.requests = 0
-        self.batches = 0
-        self.columns = 0  # real RHS columns served
-        self.padded_columns = 0  # bucket slots beyond the real columns
-        self.compute_s = 0.0
-        self.latencies: deque = deque(maxlen=_LATENCY_WINDOW)
-
-
 class ServingEngine:
     """Micro-batching SpMV server over a :class:`MatrixRegistry`.
 
@@ -102,7 +97,9 @@ class ServingEngine:
         self.batcher = MicroBatcher(max_batch=max_batch, max_wait_s=max_wait_s)
         self.buckets = tuple(buckets)
         self.clock = clock
-        self._counters: Dict[str, _MatrixCounters] = {}
+        # one ledger with the registry: admission and traffic counters live
+        # side by side, and both stats() views read the same store
+        self.metrics = registry.metrics
         self._next_id = 0
 
     def submit(self, key: str, x) -> Ticket:
@@ -116,6 +113,7 @@ class ServingEngine:
         req = SpMVRequest(key=key, x=x, req_id=self._next_id, t_submit=self.clock())
         self._next_id += 1
         self.batcher.add(req)
+        obs.gauge("serving.queue_depth", matrix=key).set(self.batcher.pending(key))
         return Ticket(self, req)
 
     def poll(self, now: Optional[float] = None) -> int:
@@ -125,9 +123,9 @@ class ServingEngine:
         for key in self.batcher.due(now):
             # a key can owe several full batches after a burst
             while self.batcher.pending(key) >= self.batcher.max_batch:
-                served += self._run_batch(key)
+                served += self._run_batch(key, reason="size")
             if key in self.batcher.due(now):  # deadline still unmet
-                served += self._run_batch(key)
+                served += self._run_batch(key, reason="deadline")
         return served
 
     def flush(self, key: Optional[str] = None) -> int:
@@ -136,30 +134,46 @@ class ServingEngine:
         served = 0
         for k in keys:
             while self.batcher.pending(k):
-                served += self._run_batch(k)
+                served += self._run_batch(k, reason="drain")
         return served
 
-    def _run_batch(self, key: str) -> int:
+    def _run_batch(self, key: str, *, reason: str = "drain") -> int:
         batch = self.batcher.take(key)
         if not batch:
             return 0
         plan = self.registry.get(key)
         X = MicroBatcher.stack(batch)  # [n, k]
         k = X.shape[1]
-        t0 = time.perf_counter()
-        Y = np.asarray(plan.matmat(X, bucketed=True, buckets=self.buckets))
-        compute_s = time.perf_counter() - t0
+        with obs.span("serve.flush", matrix=key, reason=reason, k=k):
+            t0 = time.perf_counter()
+            Y = np.asarray(plan.matmat(X, bucketed=True, buckets=self.buckets))
+            compute_s = time.perf_counter() - t0
         done = self.clock()
-        ctr = self._counters.setdefault(key, _MatrixCounters())
-        ctr.requests += len(batch)
-        ctr.batches += 1
-        ctr.columns += k
-        ctr.padded_columns += bucket_k(k, self.buckets) - k
-        ctr.compute_s += compute_s
+        m = self.metrics
+        m.counter("serving.requests", matrix=key).inc(len(batch))
+        m.counter("serving.batches", matrix=key).inc()
+        m.counter("serving.columns", matrix=key).inc(k)
+        m.counter("serving.padded_columns", matrix=key).inc(
+            bucket_k(k, self.buckets) - k
+        )
+        m.counter("serving.compute_s", matrix=key).inc(compute_s)
+        lat = m.histogram("serving.latency_s", window=_LATENCY_WINDOW, matrix=key)
+        misses = 0
         for j, req in enumerate(batch):
             req.result = Y[:, j]
             req.t_done = done
-            ctr.latencies.append(done - req.t_submit)
+            wait = done - req.t_submit
+            lat.observe(wait)
+            if wait > self.batcher.max_wait_s:
+                misses += 1
+        if obs.enabled():
+            obs.counter("serving.flush", matrix=key, reason=reason).inc()
+            obs.histogram("serving.batch_k", matrix=key).observe(k)
+            obs.gauge("serving.queue_depth", matrix=key).set(
+                self.batcher.pending(key)
+            )
+            if misses:
+                obs.counter("serving.deadline_miss", matrix=key).inc(misses)
         return len(batch)
 
     def stats(self) -> dict:
@@ -172,28 +186,34 @@ class ServingEngine:
         preprocess_s`` is the one-time admission cost divided by requests
         served so far — the number that justifies the HBP preprocessing
         under serving traffic.
+
+        Pure view: every number is read back from the shared
+        ``MetricRegistry`` — the engine holds no counter state of its own,
+        so this report and :meth:`MatrixRegistry.stats` cannot disagree.
         """
         reg = self.registry.stats()
+        m = self.metrics
         out = {}
-        empty = _MatrixCounters()  # uniform schema for zero-traffic matrices
-        for key in {*reg, *self._counters}:
-            ctr = self._counters.get(key, empty)
-            lat = np.sort(np.asarray(ctr.latencies, np.float64))
-            launched = ctr.columns + ctr.padded_columns
+        for key in {*reg, *m.label_values("serving.requests", "matrix")}:
+            requests = int(m.value("serving.requests", matrix=key))
+            batches = int(m.value("serving.batches", matrix=key))
+            columns = int(m.value("serving.columns", matrix=key))
+            padded = int(m.value("serving.padded_columns", matrix=key))
+            lat = m.get("serving.latency_s", matrix=key)
+            launched = columns + padded
             out[key] = {
                 **reg.get(key, {}),
-                "requests": ctr.requests,
-                "batches": ctr.batches,
-                "mean_batch_k": ctr.columns / max(ctr.batches, 1),
-                "occupancy": ctr.columns
-                / max(ctr.batches * self.batcher.max_batch, 1),
-                "pad_fraction": ctr.padded_columns / max(launched, 1),
-                "compute_s": ctr.compute_s,
-                "latency_p50_s": float(lat[int(0.50 * (lat.size - 1))]) if lat.size else None,
-                "latency_p99_s": float(lat[int(0.99 * (lat.size - 1))]) if lat.size else None,
+                "requests": requests,
+                "batches": batches,
+                "mean_batch_k": columns / max(batches, 1),
+                "occupancy": columns / max(batches * self.batcher.max_batch, 1),
+                "pad_fraction": padded / max(launched, 1),
+                "compute_s": m.value("serving.compute_s", matrix=key),
+                "latency_p50_s": lat.percentile(0.50) if lat is not None else None,
+                "latency_p99_s": lat.percentile(0.99) if lat is not None else None,
                 "amortized_preprocess_s": (
-                    reg[key]["preprocess_s"] / ctr.requests
-                    if key in reg and ctr.requests
+                    reg[key]["preprocess_s"] / requests
+                    if key in reg and requests
                     else None
                 ),
                 "pending": self.batcher.pending(key),

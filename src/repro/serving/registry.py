@@ -25,9 +25,11 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.formats import CSRMatrix
 from repro.core.partition import PartitionConfig
 from repro.core.tile import HBPTiles, build_tiles
+from repro.obs.metrics import MetricRegistry
 
 from .autotune import AutotuneCache, autotune_partition, matrix_hash
 
@@ -50,7 +52,6 @@ class MatrixPlan:
     preprocess_s: float  # autotune + tile build + device staging
     autotune_cache_hit: bool
     autotune_searched: bool
-    admissions: int = 1  # admit() calls that resolved to this plan
     strategy: str = "fused"
     interpret: Optional[bool] = None
     # launch geometry for RHS widths beyond one lane tile: "grid" = the
@@ -64,6 +65,17 @@ class MatrixPlan:
     _transpose: object = dataclasses.field(default=None, repr=False, compare=False)
     # device-staged clamped in-degree [n, 1], built on first mean aggregate
     _mean_div: object = dataclasses.field(default=None, repr=False, compare=False)
+    # the owning registry's shared MetricRegistry — single source of truth
+    # for the admission counters this plan's views read
+    _metrics: object = dataclasses.field(default=None, repr=False, compare=False)
+
+    @property
+    def admissions(self) -> int:
+        """admit() calls that resolved to this plan — a *view* over the
+        owning registry's shared metrics, not a second ledger."""
+        if self._metrics is None:
+            return 1
+        return int(self._metrics.value("registry.admissions", 1, matrix=self.name))
 
     def _meta(self) -> dict:
         return dict(
@@ -175,6 +187,13 @@ class MatrixRegistry:
     legacy chunked launches, and ``"auto"`` measures both per matrix at
     admission (:func:`repro.serving.autotune.pick_k_tiling`) so each
     autotuned plan picks the faster contract for its own geometry.
+
+    ``metrics`` is the shared :class:`~repro.obs.metrics.MetricRegistry`
+    backing this registry's admission counters *and* every
+    :class:`~repro.serving.engine.ServingEngine` built over it — one
+    ledger, two ``stats()`` views.  Each registry defaults to its own
+    instance (test isolation); all live instances aggregate into
+    ``repro.obs.dump()``/``report()``.
     """
 
     def __init__(
@@ -188,6 +207,7 @@ class MatrixRegistry:
         interpret: Optional[bool] = None,
         k_tiling: str = "grid",
         probe=None,
+        metrics: Optional[MetricRegistry] = None,
     ):
         if strategy is None:
             import jax
@@ -205,6 +225,7 @@ class MatrixRegistry:
         self.interpret = interpret
         self.k_tiling = k_tiling
         self.probe = probe  # None: steady-state SpMM time (spmm_probe)
+        self.metrics = metrics if metrics is not None else MetricRegistry(name="serving")
         self._plans: Dict[str, MatrixPlan] = {}
         self._by_hash: Dict[str, str] = {}
 
@@ -231,7 +252,8 @@ class MatrixRegistry:
                     f"with config {plan.cfg}; re-admission pinned {cfg} — "
                     "evict the plan first to rebuild under a different geometry"
                 )
-            plan.admissions += 1
+            self.metrics.counter("registry.hits", matrix=plan.name).inc()
+            self.metrics.counter("registry.admissions", matrix=plan.name).inc()
             return plan
         if name is not None and name in self._plans:
             raise ValueError(
@@ -241,37 +263,40 @@ class MatrixRegistry:
 
         from repro.kernels import ops
 
-        t0 = time.perf_counter()
-        # the measured search ranks candidates under the served contract;
-        # "auto" ranks under the default grid, then picks per matrix below
-        served_tiling = self.k_tiling if self.k_tiling != "auto" else "grid"
-        if cfg is not None:
-            tune_hit, tune_searched = False, False
-        else:
-            tuned = autotune_partition(
-                csr,
-                key=key,
-                cache=self.cache,
-                search=self.search,
-                candidates=self.candidates,
-                k=self.autotune_k,
-                strategy=self.strategy,  # rank configs under the served path
-                k_tiling=served_tiling,
-                probe=self.probe,  # e.g. cg_probe: rank by time-to-tolerance
-            )
-            cfg = tuned.cfg
-            tune_hit, tune_searched = tuned.cache_hit, tuned.searched
-        if self.k_tiling == "auto":
-            from .autotune import pick_k_tiling
+        with obs.span("serve.admit", matrix=name, nnz=csr.nnz) as sp:
+            t0 = time.perf_counter()
+            # the measured search ranks candidates under the served contract;
+            # "auto" ranks under the default grid, then picks per matrix below
+            served_tiling = self.k_tiling if self.k_tiling != "auto" else "grid"
+            if cfg is not None:
+                tune_hit, tune_searched = False, False
+            else:
+                tuned = autotune_partition(
+                    csr,
+                    key=key,
+                    cache=self.cache,
+                    search=self.search,
+                    candidates=self.candidates,
+                    k=self.autotune_k,
+                    strategy=self.strategy,  # rank configs under the served path
+                    k_tiling=served_tiling,
+                    probe=self.probe,  # e.g. cg_probe: rank by time-to-tolerance
+                )
+                cfg = tuned.cfg
+                tune_hit, tune_searched = tuned.cache_hit, tuned.searched
+            if self.k_tiling == "auto":
+                from .autotune import pick_k_tiling
 
-            served_tiling = pick_k_tiling(csr, cfg, strategy=self.strategy)
-        tiles = build_tiles(csr, cfg)
-        device = ops.device_tiles(tiles)
-        diag = csr.diagonal()
-        row_nnz = csr.row_nnz().astype(np.int64)
-        preprocess_s = time.perf_counter() - t0
+                served_tiling = pick_k_tiling(csr, cfg, strategy=self.strategy)
+            tiles = build_tiles(csr, cfg)
+            with obs.span("serve.stage_device", matrix=name):
+                device = ops.device_tiles(tiles)
+            diag = csr.diagonal()
+            row_nnz = csr.row_nnz().astype(np.int64)
+            preprocess_s = time.perf_counter() - t0
+            name = name or f"m_{key[:12]}"
+            sp.annotate(matrix=name, preprocess_s=round(preprocess_s, 6))
 
-        name = name or f"m_{key[:12]}"
         plan = MatrixPlan(
             name=name,
             matrix_hash=key,
@@ -288,9 +313,19 @@ class MatrixRegistry:
             strategy=self.strategy,
             interpret=self.interpret,
             k_tiling=served_tiling,
+            _metrics=self.metrics,
         )
         self._plans[name] = plan
         self._by_hash[key] = name
+        m = self.metrics
+        m.counter("registry.misses", matrix=name).inc()
+        m.counter("registry.admissions", matrix=name).inc()
+        m.counter("registry.preprocess_s", matrix=name).inc(preprocess_s)
+        if tune_hit:
+            m.counter("registry.autotune_cache_hits", matrix=name).inc()
+        if tune_searched:
+            m.counter("registry.autotune_searches", matrix=name).inc()
+        m.gauge("registry.resident").set(len(self._plans))
         return plan
 
     def admit_pair(
@@ -323,7 +358,9 @@ class MatrixRegistry:
                     f"pinned {cfg_T} — evict the pair first to rebuild"
                 )
             if partner is not plan:  # keep both sides' admission stats in step
-                partner.admissions += 1
+                self.metrics.counter(
+                    "registry.admissions", matrix=partner.name
+                ).inc()
             return plan
         csr_T = csr.transpose()
         plan_T = self.admit(csr_T, f"{plan.name}::T", cfg=cfg_T)
@@ -358,9 +395,16 @@ class MatrixRegistry:
         if partner is not None and partner is not plan:
             partner.transpose_name = None
             partner._transpose = None
+        self.metrics.counter("registry.evictions", matrix=name).inc()
+        self.metrics.gauge("registry.resident").set(len(self._plans))
 
     def stats(self) -> dict:
-        """Per-matrix admission/preprocessing snapshot (engine adds traffic)."""
+        """Per-matrix admission/preprocessing snapshot (engine adds traffic).
+
+        A *view*: admission counts are read back from the shared
+        :class:`~repro.obs.metrics.MetricRegistry` (``self.metrics``), the
+        same store every engine over this registry reports traffic into.
+        """
         return {
             name: {
                 "matrix_hash": p.matrix_hash[:12],

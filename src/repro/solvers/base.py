@@ -4,15 +4,29 @@ Every solver loop is a ``jax.lax.while_loop`` whose carry includes a
 fixed-length residual history (``maxiter + 1`` slots, NaN beyond the last
 iteration actually run), so the whole iteration — SpMV/SpMM launches,
 vector updates, convergence test — stays on device and jit-compiles.
+``record_history=False`` shrinks the carried history to a single slot
+(the in-loop scatter then drops out of bounds — JAX's documented update
+semantics — so the loop body is unchanged); :func:`emit_history` streams
+a recorded history into ``repro.obs`` *after* the loop returns, never
+from inside it, so observability adds zero host syncs per iteration.
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["SolveResult", "EigResult", "l2norm", "safe_div", "history_init"]
+__all__ = [
+    "SolveResult",
+    "EigResult",
+    "l2norm",
+    "safe_div",
+    "history_init",
+    "emit_history",
+]
 
 
 class SolveResult(NamedTuple):
@@ -53,6 +67,41 @@ def safe_div(num: jax.Array, den: jax.Array) -> jax.Array:
 
 
 def history_init(maxiter: int, first_row: jax.Array) -> jax.Array:
-    """[maxiter + 1, ...] NaN history with slot 0 filled."""
+    """[maxiter + 1, ...] NaN history with slot 0 filled.
+
+    ``maxiter=0`` is the ``record_history=False`` form: one slot, and the
+    solvers' in-loop ``hist.at[k + 1].set(...)`` scatters land out of
+    bounds and are dropped — same loop body, no carried history memory.
+    """
     hist = jnp.full((maxiter + 1,) + first_row.shape, jnp.nan, jnp.float32)
     return hist.at[0].set(first_row)
+
+
+def emit_history(solver: str, hist: jax.Array) -> None:
+    """Stream a residual history into ``repro.obs`` as a per-run series.
+
+    Called by the solvers after their ``lax.while_loop`` returns — never
+    inside it, so instrumentation costs no per-iteration host syncs.  A
+    no-op when obs is disabled, when the solver is itself under a ``jit``
+    trace (``hist`` is an abstract tracer — no values exist yet), or when
+    the history holds a single slot (``record_history=False``).  Blocked
+    RHS histories record the worst column per iteration (the convergence
+    test is on the max).  Each call gets its own ``run=N``-labelled
+    series, indexed by iteration.
+    """
+    from repro import obs
+
+    if not obs.enabled() or isinstance(hist, jax.core.Tracer):
+        return
+    vals = np.asarray(hist)
+    if vals.shape[0] <= 1:  # record_history=False: nothing to stream
+        return
+    if vals.ndim > 1:
+        vals = np.nanmax(vals.reshape(vals.shape[0], -1), axis=1)
+    runs = obs.counter("solver.runs", solver=solver)
+    runs.inc()
+    series = obs.series(f"solver.{solver}.residual", run=int(runs.value))
+    for i, v in enumerate(vals):
+        if math.isnan(v):
+            break
+        series.append(float(v), index=i)

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .base import SolveResult, history_init, l2norm, safe_div
+from .base import SolveResult, emit_history, history_init, l2norm, safe_div
 from .operator import aslinearoperator
 
 __all__ = ["bicgstab"]
@@ -31,6 +31,7 @@ def bicgstab(
     tol: float = 1e-6,
     maxiter: int = 400,
     M=None,
+    record_history: bool = True,
 ) -> SolveResult:
     """Solve ``A x = b`` for general (nonsymmetric) ``A``.
 
@@ -40,6 +41,10 @@ def bicgstab(
     hitting exactly zero — residual already at machine floor) the guarded
     divisions freeze the iterate instead of producing NaNs, and the loop
     exits on the residual test or ``maxiter``.
+
+    ``record_history`` as in :func:`~repro.solvers.cg.cg`: ``True``
+    carries per-iteration residual norms (and streams them to
+    ``repro.obs`` post-loop), ``False`` carries one slot.
     """
     op = aslinearoperator(A)
     apply_M = aslinearoperator(M) if M is not None else (lambda v: v)
@@ -55,7 +60,7 @@ def bicgstab(
     omega = ones
     v = jnp.zeros_like(r)
     p = jnp.zeros_like(r)
-    hist = history_init(maxiter, l2norm(r))
+    hist = history_init(maxiter if record_history else 0, l2norm(r))
 
     def cond(state):
         k, _, r, *_ = state
@@ -81,6 +86,7 @@ def bicgstab(
     state = (0, x, r, p, v, rho, alpha, omega, hist)
     k, x, r, p, v, rho, alpha, omega, hist = jax.lax.while_loop(cond, body, state)
     res = l2norm(r)
+    emit_history("bicgstab", hist)
     return SolveResult(
         x=x,
         converged=jnp.all(res <= tol * bnorm),

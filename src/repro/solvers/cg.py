@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .base import SolveResult, history_init, l2norm, safe_div
+from .base import SolveResult, emit_history, history_init, l2norm, safe_div
 from .operator import aslinearoperator
 
 __all__ = ["cg"]
@@ -33,6 +33,7 @@ def cg(
     tol: float = 1e-6,
     maxiter: int = 200,
     M=None,
+    record_history: bool = True,
 ) -> SolveResult:
     """Solve ``A x = b`` for SPD ``A``; ``b`` is ``[n]`` or ``[n, k]``.
 
@@ -42,6 +43,12 @@ def cg(
     matrices) converge in far fewer iterations under :func:`jacobi`.
     Converges when every column satisfies ``||r|| <= tol * ||b||``.
     The loop is a ``lax.while_loop`` — jit-compatible end to end.
+
+    ``record_history=True`` (default) carries per-iteration residual
+    norms in the loop state (``result.history``, NaN-padded) and — with
+    ``repro.obs`` enabled — streams them as a ``solver.cg.residual``
+    series after the loop exits; ``False`` carries a single slot instead
+    (memory-free long runs, ``history`` holds only the initial norm).
     """
     op = aslinearoperator(A)
     apply_M = aslinearoperator(M) if M is not None else (lambda v: v)
@@ -53,7 +60,7 @@ def cg(
     z = apply_M(r)
     p = z
     rz = jnp.sum(r * z, axis=0)
-    hist = history_init(maxiter, l2norm(r))
+    hist = history_init(maxiter if record_history else 0, l2norm(r))
 
     def cond(state):
         k, _, r, _, _, _ = state
@@ -74,6 +81,7 @@ def cg(
 
     k, x, r, p, rz, hist = jax.lax.while_loop(cond, body, (0, x, r, p, rz, hist))
     res = l2norm(r)
+    emit_history("cg", hist)
     return SolveResult(
         x=x,
         converged=jnp.all(res <= tol * bnorm),

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .base import SolveResult, history_init, l2norm
+from .base import SolveResult, emit_history, history_init, l2norm
 from .operator import aslinearoperator
 
 __all__ = ["chebyshev", "estimate_spectrum"]
@@ -44,11 +44,16 @@ def chebyshev(
     x0: jax.Array | None = None,
     tol: float = 1e-6,
     maxiter: int = 200,
+    record_history: bool = True,
 ) -> SolveResult:
     """Solve / smooth ``A x = b`` with Chebyshev acceleration.
 
     With ``tol=0`` it runs exactly ``maxiter`` iterations — the fixed
     polynomial degree of a multigrid smoothing pass.
+
+    ``record_history`` as in :func:`~repro.solvers.cg.cg`: ``True``
+    carries per-iteration residual norms (and streams them to
+    ``repro.obs`` post-loop), ``False`` carries one slot.
     """
     if not 0 < lam_min < lam_max:
         raise ValueError(f"need 0 < lam_min < lam_max, got [{lam_min}, {lam_max}]")
@@ -63,7 +68,7 @@ def chebyshev(
 
     r = b - op(x)
     d = r / theta
-    hist = history_init(maxiter, l2norm(r))
+    hist = history_init(maxiter if record_history else 0, l2norm(r))
 
     def cond(state):
         k, _, r, _, _, _ = state
@@ -81,6 +86,7 @@ def chebyshev(
     state = (0, x, r, d, 1.0 / sigma, hist)
     k, x, r, d, rho, hist = jax.lax.while_loop(cond, body, state)
     res = l2norm(r)
+    emit_history("chebyshev", hist)
     return SolveResult(
         x=x,
         converged=jnp.all(res <= tol * bnorm),

@@ -1,0 +1,346 @@
+"""The observability layer: metrics core, span tracer, gating, exports.
+
+Covers the contracts the instrumented subsystems rely on: histogram
+percentiles agree with numpy (exact inside the sample window, bucket-
+interpolated beyond), span nesting/ordering survives the Chrome-trace
+export, counters hold up under concurrent bumps, and — the overhead
+contract — disabled mode retains exactly nothing.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.metrics import Histogram, MetricRegistry
+from repro.obs.report import amortization_ledger, render
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture()
+def obs_on():
+    """Enable obs for one test against clean global state."""
+    obs.reset()
+    obs.enable()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+# --- histogram percentiles -------------------------------------------------
+
+
+def test_histogram_percentiles_exact_within_window(rng):
+    draws = rng.lognormal(mean=-6.0, sigma=2.0, size=1000)
+    h = Histogram("t", {}, window=4096)
+    for v in draws:
+        h.observe(v)
+    s = np.sort(draws)
+    for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+        # the engine's historical convention: sorted[int(q * (n - 1))]
+        assert h.percentile(q) == pytest.approx(s[int(q * (s.size - 1))])
+    assert h.count == 1000
+    assert h.mean == pytest.approx(draws.mean())
+
+
+def test_histogram_percentiles_interpolated_beyond_window(rng):
+    draws = rng.lognormal(mean=-6.0, sigma=2.0, size=5000)
+    h = Histogram("t", {}, window=256)  # window evicts: bucket fallback
+    for v in draws:
+        h.observe(v)
+    for q in (0.5, 0.95, 0.99):
+        exact = float(np.sort(draws)[int(q * (draws.size - 1))])
+        est = h.percentile(q)
+        # default buckets are ~12% wide: interpolation stays within one
+        assert est == pytest.approx(exact, rel=0.15)
+    assert h.percentile(0.0) >= h.vmin
+    assert h.percentile(1.0) <= h.vmax * (1 + 1e-12)
+
+
+def test_histogram_empty_and_validation():
+    h = Histogram("t", {})
+    assert h.percentile(0.5) is None
+    assert h.snapshot()["count"] == 0 and h.snapshot()["p99"] is None
+    with pytest.raises(ValueError):
+        h.percentile(1.5)
+    with pytest.raises(ValueError):
+        Histogram("bad", {}, buckets=[3.0, 1.0])
+
+
+# --- counters / gauges / registry -----------------------------------------
+
+
+def test_counter_monotone_and_thread_safe():
+    reg = MetricRegistry()
+    c = reg.counter("hits")
+    threads = [
+        threading.Thread(target=lambda: [c.inc() for _ in range(10_000)])
+        for _ in range(8)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 80_000
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_histogram_thread_safe_observe():
+    reg = MetricRegistry()
+    h = reg.histogram("lat", window=0)  # bucket-only path under contention
+    threads = [
+        threading.Thread(target=lambda: [h.observe(1e-4) for _ in range(5_000)])
+        for _ in range(8)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.count == 40_000
+    assert int(h.bucket_counts.sum()) == 40_000
+
+
+def test_registry_labels_and_type_conflicts():
+    reg = MetricRegistry()
+    a = reg.counter("req", matrix="A")
+    b = reg.counter("req", matrix="B")
+    assert a is not b
+    assert reg.counter("req", matrix="A") is a  # get-or-create is stable
+    a.inc(3)
+    assert reg.value("req", matrix="A") == 3
+    assert reg.value("req", matrix="C", default=-1) == -1
+    assert sorted(reg.label_values("req", "matrix")) == ["A", "B"]
+    with pytest.raises(TypeError):
+        reg.gauge("req")  # same name, different type
+    g = reg.gauge("depth")
+    g.set(5)
+    g.dec(2)
+    assert g.value == 3
+
+
+def test_series_is_iteration_indexed():
+    reg = MetricRegistry()
+    s = reg.series("resid", window=4)
+    s.extend([4.0, 3.0, 2.0, 1.0, 0.5])
+    assert s.count == 5
+    assert s.points == [(1, 3.0), (2, 2.0), (3, 1.0), (4, 0.5)]  # window evicts
+    snap = s.snapshot()
+    assert snap["last"] == 0.5 and snap["min"] == 0.5
+
+
+# --- span tracer -----------------------------------------------------------
+
+
+def test_span_nesting_and_ordering_in_chrome_trace(tmp_path):
+    tr = Tracer()
+    with tr.span("outer", stage="admit"):
+        with tr.span("inner_a"):
+            pass
+        with tr.span("inner_b") as sp:
+            sp.annotate(found=3)
+    trace = tr.chrome_trace()
+    events = trace["traceEvents"]
+    # children close before the parent: completion order, depth marks nesting
+    assert [e["name"] for e in events] == ["inner_a", "inner_b", "outer"]
+    by = {e["name"]: e for e in events}
+    assert by["outer"]["depth"] == 0
+    assert by["inner_a"]["depth"] == by["inner_b"]["depth"] == 1
+    for child in ("inner_a", "inner_b"):
+        assert by[child]["ts"] >= by["outer"]["ts"]
+        assert by[child]["ts"] + by[child]["dur"] <= by["outer"]["ts"] + by["outer"]["dur"] + 1e-6
+    assert by["inner_a"]["ts"] + by["inner_a"]["dur"] <= by["inner_b"]["ts"]
+    assert by["inner_b"]["args"]["found"] == 3
+    assert all(e["ph"] == "X" for e in events)
+    # the export round-trips as the JSON object Perfetto loads
+    path = tmp_path / "trace.json"
+    tr.write_chrome(path)
+    loaded = json.loads(path.read_text())
+    assert loaded["traceEvents"] == json.loads(json.dumps(events))
+
+
+def test_span_records_exceptions_and_rebalances_depth():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("fails"):
+            raise RuntimeError("boom")
+    (ev,) = tr.snapshot()
+    assert ev["args"]["error"] == "RuntimeError"
+    with tr.span("after"):  # depth recovered despite the exception
+        pass
+    assert tr.snapshot()[-1]["depth"] == 0
+
+
+def test_tracer_bounds_events_and_counts_drops():
+    tr = Tracer(max_events=3)
+    for i in range(5):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr.events) == 3 and tr.dropped == 2
+    assert tr.chrome_trace()["otherData"]["dropped_events"] == 2
+    tr.clear()
+    assert tr.events == [] and tr.dropped == 0
+
+
+def test_span_summary_aggregates_by_name():
+    tr = Tracer()
+    for _ in range(3):
+        with tr.span("hot"):
+            pass
+    with tr.span("cold"):
+        pass
+    summary = {s["name"]: s for s in tr.summary()}
+    assert summary["hot"]["count"] == 3 and summary["cold"]["count"] == 1
+    assert summary["hot"]["total_ms"] >= summary["hot"]["mean_ms"]
+
+
+# --- gating: disabled mode retains nothing ---------------------------------
+
+
+def test_disabled_mode_retains_zero_events():
+    obs.reset()
+    assert not obs.enabled()
+    with obs.span("never", matrix="A") as sp:
+        sp.annotate(x=1)
+        sp.sync(np.zeros(2))
+    obs.counter("never").inc(100)
+    obs.gauge("never").set(5)
+    obs.histogram("never").observe(1.0)
+    obs.series("never").append(1.0)
+    assert obs.tracer().snapshot() == []
+    assert obs.registry().metrics() == []
+    snap = obs.collect()
+    assert snap["enabled"] is False and snap["n_events"] == 0
+    assert all(not r["metrics"] or r["registry"] != "global" for r in snap["registries"])
+
+
+def test_enable_roundtrip_records_then_stops(obs_on):
+    with obs.span("on"):
+        obs.counter("hits").inc()
+    assert len(obs.tracer().snapshot()) == 1
+    assert obs.registry().value("hits") == 1
+    obs.disable()
+    with obs.span("off"):
+        obs.counter("hits").inc()
+    assert len(obs.tracer().snapshot()) == 1  # unchanged
+    assert obs.registry().value("hits") == 1
+
+
+# --- instrumented subsystems end to end ------------------------------------
+
+
+def test_admission_emits_nested_spans_and_counters(obs_on):
+    from repro.core import PartitionConfig, build_tiles
+    from repro.core.matrices import circuit
+
+    cfg = PartitionConfig(row_block=64, col_block=128, group=8, lane=16)
+    build_tiles(circuit(200, seed=0), cfg)
+    names = [e["name"] for e in obs.tracer().snapshot()]
+    assert "admit.build_tiles" in names
+    assert "admit.partition" in names and "admit.hash" in names
+    by = {e["name"]: e for e in obs.tracer().snapshot()}
+    assert by["admit.partition"]["depth"] > by["admit.build_tiles"]["depth"]
+    assert obs.registry().value("admit.tile_builds") == 1
+    assert obs.registry().value("admit.tiles_built") > 0
+
+
+def test_kernel_launch_counters(obs_on):
+    from repro.core import PartitionConfig, build_tiles, csr_from_dense
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(5)
+    dense = (rng.standard_normal((40, 50)) * (rng.random((40, 50)) < 0.2)).astype(
+        np.float32
+    )
+    tiles = build_tiles(
+        csr_from_dense(dense), PartitionConfig(row_block=64, col_block=128, lane=16)
+    )
+    ops.hbp_spmm(tiles, rng.standard_normal((50, 8)).astype(np.float32), strategy="stable")
+    ops.hbp_spmv(tiles, rng.standard_normal(50).astype(np.float32), strategy="stable")
+    reg = obs.registry()
+    assert reg.value("kernels.launches", op="spmm", strategy="stable",
+                     k_tiling="grid", combine="sum") == 1
+    assert reg.value("kernels.launches", op="spmv", strategy="stable",
+                     k_tiling="grid", combine="sum") == 1
+    assert reg.value("kernels.traversals") == 2  # both k <= LANE_TILE: 1 pass each
+    assert reg.value("kernels.bytes_modeled") > 0
+
+
+def test_stream_passes_model():
+    from repro.kernels.ops import LANE_TILE, stream_passes
+
+    assert stream_passes(1, "stable", "grid") == 1
+    assert stream_passes(LANE_TILE, "fused", "loop") == 1
+    # one-pass geometries at wide k
+    assert stream_passes(4 * LANE_TILE, "partials", "grid") == 1
+    assert stream_passes(4 * LANE_TILE, "reference", "grid") == 1
+    # chunked geometries pay one pass per lane tile
+    assert stream_passes(4 * LANE_TILE, "partials", "loop") == 4
+    assert stream_passes(4 * LANE_TILE, "stable", "grid") == 4
+    assert stream_passes(3 * LANE_TILE + 1, "fused", "loop") == 4
+
+
+def test_solver_history_streams_into_series(obs_on):
+    from repro.solvers import cg
+
+    rng = np.random.default_rng(0)
+    n = 48
+    R = rng.standard_normal((n, n)) * 0.05
+    S = (np.eye(n) + R @ R.T).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    res = cg(S, b, tol=1e-6, maxiter=100)
+    s = obs.registry().get("solver.cg.residual", run=1)
+    assert s is not None
+    assert len(s.points) == int(res.iterations) + 1
+    np.testing.assert_allclose(
+        s.values, np.asarray(res.history)[: int(res.iterations) + 1], rtol=1e-6
+    )
+    # a second run gets its own stream
+    cg(S, b, tol=1e-6, maxiter=100)
+    assert obs.registry().get("solver.cg.residual", run=2) is not None
+
+
+# --- artifacts and the dashboard ------------------------------------------
+
+
+def test_dump_report_and_ledger(obs_on, tmp_path):
+    from repro.core.matrices import circuit
+    from repro.serving import MatrixRegistry, ServingEngine
+
+    reg = MatrixRegistry(cache_dir=tmp_path / "cache", search=False)
+    A = circuit(150, seed=1)
+    reg.admit(A, "A")
+    reg.admit(A, "A")  # content hit
+    eng = ServingEngine(reg, max_wait_s=1e9, max_batch=8)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+    eng.flush()
+
+    snap = obs.dump(tmp_path / "obs.json")
+    assert json.loads((tmp_path / "obs.json").read_text())["schema"] == 1
+    ledger = amortization_ledger(snap)
+    (row,) = [r for r in ledger if r["matrix"] == "A"]
+    assert row["requests"] == 4 and row["preprocess_s"] > 0
+    assert row["amortized_preprocess_s"] == pytest.approx(row["preprocess_s"] / 4)
+
+    text = render(snap)
+    assert "registry.hits{matrix=A}" in text
+    assert "serving.requests{matrix=A}" in text
+    assert "amortization ledger" in text
+
+    obs.write_trace(tmp_path / "trace.json")
+    trace = json.loads((tmp_path / "trace.json").read_text())
+    assert any(e["name"] == "serve.admit" for e in trace["traceEvents"])
+    assert any(e["name"] == "serve.flush" for e in trace["traceEvents"])
+
+    obs.write_events(tmp_path / "events.jsonl")
+    lines = (tmp_path / "events.jsonl").read_text().splitlines()
+    assert len(lines) == len(trace["traceEvents"])
+    assert all(json.loads(ln)["ph"] == "X" for ln in lines)
+
+
+def test_render_handles_empty_snapshot():
+    out = render({"registries": [], "spans": []})
+    assert "no metrics recorded" in out

@@ -282,3 +282,38 @@ def test_registry_plan_composes_with_solvers(registry, rng):
     assert bool(res.converged)
     x_ref = np.linalg.solve(S.astype(np.float64), b)
     assert np.abs(np.asarray(res.x) - x_ref).max() / np.abs(x_ref).max() < 1e-4
+
+
+def test_engine_and_registry_stats_share_one_ledger(two_matrices, registry, rng):
+    """Regression for the stats() double-bookkeeping: both reports are
+    views over the registry's shared MetricRegistry, so admission counts
+    (and the preprocess cost the amortization divides) cannot drift."""
+    A, B = two_matrices
+    registry.admit(A, "A")
+    registry.admit(A, "A-again")  # content hit
+    registry.admit(B, "B")
+    eng = ServingEngine(registry, max_wait_s=1e9, max_batch=8)
+    for _ in range(5):
+        eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+    eng.flush()
+
+    reg_stats = registry.stats()
+    eng_stats = eng.stats()
+    for key in ("A", "B"):
+        assert eng_stats[key]["admissions"] == reg_stats[key]["admissions"]
+        assert eng_stats[key]["preprocess_s"] == reg_stats[key]["preprocess_s"]
+    assert reg_stats["A"]["admissions"] == 2
+    # both views read the same backing store
+    m = registry.metrics
+    assert eng.metrics is m
+    assert m.value("registry.admissions", matrix="A") == 2
+    assert m.value("registry.hits", matrix="A") == 1
+    assert m.value("registry.misses", matrix="A") == 1
+    assert m.value("serving.requests", matrix="A") == 5
+    assert eng_stats["A"]["requests"] == 5
+    assert eng_stats["A"]["amortized_preprocess_s"] == pytest.approx(
+        reg_stats["A"]["preprocess_s"] / 5
+    )
+    # a second engine over the same registry reports from the same ledger
+    eng2 = ServingEngine(registry, max_wait_s=1e9, max_batch=8)
+    assert eng2.stats()["A"]["requests"] == 5

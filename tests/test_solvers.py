@@ -407,3 +407,71 @@ def test_pagerank_multi_personalization_spmm(rng):
     for j in range(3):
         single = pagerank(tiles, personalization=P[:, j], dangling=dang, tol=1e-10, maxiter=300)
         np.testing.assert_allclose(pm[:, j], np.asarray(single.x), atol=1e-6)
+
+
+# --- convergence telemetry (record_history) --------------------------------
+
+
+@pytest.mark.parametrize("solver_kwargs", [
+    (cg, {}),
+    (bicgstab, {}),
+], ids=["cg", "bicgstab"])
+def test_record_history_false_single_slot_same_solution(solver_kwargs, spd64, rng):
+    solver, kw = solver_kwargs
+    b = rng.standard_normal(64).astype(np.float32)
+    full = solver(spd64, b, tol=1e-7, maxiter=500, **kw)
+    lean = solver(spd64, b, tol=1e-7, maxiter=500, record_history=False, **kw)
+    assert np.asarray(lean.history).shape == (1,)  # initial norm only
+    assert np.asarray(full.history).shape == (501,)
+    # the iteration itself is untouched: same trajectory, same exit
+    assert int(lean.iterations) == int(full.iterations)
+    np.testing.assert_array_equal(np.asarray(lean.x), np.asarray(full.x))
+    np.testing.assert_allclose(
+        np.asarray(lean.history)[0], np.asarray(full.history)[0], rtol=1e-6
+    )
+
+
+def test_chebyshev_record_history_false(spd64, rng):
+    lo, hi = estimate_spectrum(spd64)
+    b = rng.standard_normal(64).astype(np.float32)
+    full = chebyshev(spd64, b, lam_min=lo, lam_max=hi, tol=0.0, maxiter=30)
+    lean = chebyshev(
+        spd64, b, lam_min=lo, lam_max=hi, tol=0.0, maxiter=30, record_history=False
+    )
+    assert np.asarray(lean.history).shape == (1,)
+    np.testing.assert_array_equal(np.asarray(lean.x), np.asarray(full.x))
+
+
+def test_cg_history_is_monotone_ish(spd64, rng):
+    """The recorded residual stream behaves like CG on an SPD system:
+    overall decay by orders of magnitude, no sustained growth.  (CG's
+    2-norm residual is not strictly monotone, so assert a loose envelope:
+    each residual stays under 10x the running minimum.)"""
+    b = rng.standard_normal(64).astype(np.float32)
+    res = cg(spd64, b, tol=1e-8, maxiter=500)
+    hist = np.asarray(res.history)[: int(res.iterations) + 1]
+    assert hist[-1] < 1e-6 * hist[0]  # decayed hard
+    running_min = np.minimum.accumulate(hist)
+    assert np.all(hist <= 10.0 * np.maximum(running_min, 1e-30))
+
+
+def test_record_history_streams_to_obs(spd64, rng):
+    """With obs enabled the carried history surfaces as a metric stream;
+    record_history=False keeps the stream silent."""
+    from repro import obs
+
+    b = rng.standard_normal(64).astype(np.float32)
+    obs.reset()
+    obs.enable()
+    try:
+        res = cg(spd64, b, tol=1e-7, maxiter=500)
+        cg(spd64, b, tol=1e-7, maxiter=500, record_history=False)
+        streams = obs.registry().find("solver.cg.residual")
+        assert len(streams) == 1  # only the recording run emitted
+        (s,) = streams
+        assert len(s.points) == int(res.iterations) + 1
+        vals = np.asarray(s.values)
+        assert vals[-1] < vals[0]
+    finally:
+        obs.disable()
+        obs.reset()
