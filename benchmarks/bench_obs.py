@@ -14,12 +14,22 @@ it to that with three measurements:
   counter increment and one empty span, enabled and disabled, so a
   regression in the primitives is visible before it shows up in the
   engine numbers.
+* ``obs/flight_record`` — per-op cost of one always-on flight-recorder
+  ring write: unlike the gated primitives this path has no off state, so
+  its microcost IS the serving hot loop's telemetry floor.
 
 All timings restore the obs enable state they found, and the registries
 are reset afterwards so a ``--trace`` run's artifact is not polluted by
 benchmark-loop spans.
+
+Set ``REPRO_OBS_DUMP=PATH`` to write the full obs snapshot (including the
+serving engines' ``attr.*`` bandwidth-attribution counters) before the
+benchmark's registries go out of scope — the input
+``python -m repro.analysis.report --attribution PATH`` renders.
 """
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
@@ -42,7 +52,7 @@ def _serve_cycle(engine: ServingEngine, key: str, xs, vclock) -> None:
     engine.flush()
 
 
-def _time_serving(csr, name: str, n_req: int, repeats: int) -> float:
+def _time_serving(csr, name: str, n_req: int, repeats: int, keep: list):
     reg = MatrixRegistry(search=False, cache_dir=".hbp_autotune")
     plan = reg.admit(csr, name)
     rng = np.random.default_rng(2)
@@ -52,6 +62,9 @@ def _time_serving(csr, name: str, n_req: int, repeats: int) -> float:
         plan.matmat(np.zeros((csr.n_cols, k), np.float32)).block_until_ready()
     vclock = [0.0]
     eng = ServingEngine(reg, max_wait_s=0.002, clock=lambda: vclock[0])
+    # metric registries are weakly aggregated — keep the MatrixRegistry
+    # alive so a REPRO_OBS_DUMP snapshot still sees its attr.* counters
+    keep.append(reg)
     return timeit(lambda: _serve_cycle(eng, name, xs, vclock), repeats=repeats)
 
 
@@ -76,13 +89,20 @@ def _micro_span() -> None:
             pass
 
 
+def _micro_flight() -> None:
+    fl = obs.flight()
+    for _ in range(_MICRO_OPS):
+        fl.record("bench.flight_micro")
+
+
 def main(full: bool = False) -> None:
     n_req = 256 if full else 64
     repeats = 7 if full else 5
     name, csr = next(iter(load_suite(False).items()))  # smallest suite matrix
 
-    t_off = _with_obs(False, lambda: _time_serving(csr, name, n_req, repeats))
-    t_on = _with_obs(True, lambda: _time_serving(csr, name, n_req, repeats))
+    keep: list = []
+    t_off = _with_obs(False, lambda: _time_serving(csr, name, n_req, repeats, keep))
+    t_on = _with_obs(True, lambda: _time_serving(csr, name, n_req, repeats, keep))
     overhead = t_on.stats["median_us"] / t_off.stats["median_us"]
     emit(
         f"obs/serve_disabled/{name}",
@@ -107,6 +127,23 @@ def main(full: bool = False) -> None:
                 f"ns_per_op={1e9 * float(t) / _MICRO_OPS:.0f}",
                 config={"ops": _MICRO_OPS},
             )
+
+    # the flight recorder has no disabled state — one bench, always on
+    t = timeit(_micro_flight, repeats=repeats)
+    emit(
+        "obs/flight_record",
+        float(t) / _MICRO_OPS,
+        f"ns_per_op={1e9 * float(t) / _MICRO_OPS:.0f}",
+        config={"ops": _MICRO_OPS},
+    )
+
+    # snapshot before the registries in `keep` go out of scope (their
+    # MetricRegistry instances are weakly aggregated into the dump)
+    dump_path = os.environ.get("REPRO_OBS_DUMP")
+    if dump_path:
+        obs.dump(dump_path)
+        print(f"# obs snapshot -> {dump_path}")
+    del keep
 
     # don't leak benchmark-loop metrics/spans into a --trace artifact
     if not obs.enabled():

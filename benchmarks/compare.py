@@ -13,6 +13,17 @@ else ``median_us``.  Records present on only one side are
 reported but never fail the gate — new benches enter the baseline on the
 next refresh (see README "Benchmarking & regression gates"), and retired
 ones leave it.  Exit status: 0 clean, 1 regression(s).
+
+Improvements beyond the threshold are reported (``IMPROVE`` lines, never
+failing) — a baseline that is >25% slower than reality masks an equally
+large later regression, so the gate nags until someone refreshes it:
+
+    python -m benchmarks.compare BENCH_ci.json \
+        --baseline benchmarks/baseline.json --update
+
+``--update`` rewrites the baseline from the current run (gated prefixes
+only, when ``--prefix`` is given); records present only in the old
+baseline are kept, so a partial run never silently drops gate coverage.
 """
 from __future__ import annotations
 
@@ -58,6 +69,12 @@ def main(argv=None) -> int:
         help="only gate records whose name starts with one of these "
         "comma-separated prefixes (default: every shared record)",
     )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the current run instead of gating "
+        "(gated prefixes only; baseline-only records are kept)",
+    )
     args = ap.parse_args(argv)
 
     cur = load_records(args.current)
@@ -71,7 +88,29 @@ def main(argv=None) -> int:
     def gated(name: str) -> bool:
         return prefixes is None or name.startswith(prefixes)
 
-    regressions, improved, skipped = [], [], []
+    if args.update:
+        merged = dict(base)  # baseline-only records survive a partial run
+        refreshed = 0
+        for name, rec in cur.items():
+            if not gated(name):
+                continue
+            merged[name] = rec
+            refreshed += 1
+        payload = {
+            "schema": 1,
+            "benches": [merged[name] for name in sorted(merged)],
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        kept = len(merged) - refreshed
+        print(
+            f"baseline {args.baseline} updated: {refreshed} record(s) "
+            f"refreshed from {args.current}, {kept} kept from the old baseline"
+        )
+        return 0
+
+    regressions, improved, refresh_worthy, skipped = [], [], [], []
     for name in sorted(set(cur) | set(base)):
         if not gated(name):
             continue
@@ -91,6 +130,8 @@ def main(argv=None) -> int:
         line = f"{name}: {b:.1f}us -> {c:.1f}us ({ratio:.2f}x {metric})"
         if ratio > 1.0 + args.threshold:
             regressions.append(line)
+        elif ratio < 1.0 - args.threshold:
+            refresh_worthy.append(line)
         elif ratio < 1.0:
             improved.append(line)
 
@@ -98,6 +139,16 @@ def main(argv=None) -> int:
         print(f"SKIP {name}: {why}")
     for line in improved:
         print(f"OK   {line}")
+    if refresh_worthy:
+        # never a failure — but a stale-slow baseline masks an equally
+        # large later regression, so say so until someone refreshes it
+        for line in refresh_worthy:
+            print(f"IMPROVE {line}")
+        print(
+            f"\n{len(refresh_worthy)} record(s) improved past the "
+            f"{args.threshold:.0%} threshold — the baseline is stale; "
+            "refresh it with --update so the gate keeps its teeth"
+        )
     if regressions:
         print(
             f"\n{len(regressions)} regression(s) past the "

@@ -1,0 +1,89 @@
+"""SLO smoke: induced deadline misses MUST trip the always-on telemetry.
+
+Nightly-CI guard for the flight-recorder + SLO path: serve a small matrix
+on a virtual clock, stall it long enough that every pending request
+misses its deadline, then assert the failure left the evidence a real
+outage would need —
+
+* a ``flight_deadline_miss_*.json`` post-mortem dump (Perfetto-loadable)
+  containing the offending ``serve.flush`` span;
+* a burning ``slo.burn_rate`` gauge and a paging
+  :meth:`ServingEngine.health` view.
+
+Exits nonzero when any of it is missing, so a regression that silently
+disables the always-on path fails the nightly job::
+
+    PYTHONPATH=src REPRO_FLIGHT_DIR=flight_dumps python examples/slo_smoke.py
+"""
+import json
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.core.matrices import circuit
+from repro.obs.flight import FlightRecorder
+from repro.serving import MatrixRegistry, ServingEngine
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory() as cache_dir:
+        reg = MatrixRegistry(cache_dir=cache_dir, search=False)
+        A = circuit(200, seed=7)
+        reg.admit(A, "smoke")
+
+        flight = FlightRecorder(capacity=512)  # dumps to $REPRO_FLIGHT_DIR
+        vclock = [0.0]
+        eng = ServingEngine(
+            reg, max_wait_s=0.001, max_batch=8, clock=lambda: vclock[0],
+            flight=flight,
+        )
+        rng = np.random.default_rng(0)
+        for i in range(16):
+            vclock[0] = 1e-5 * i
+            eng.submit("smoke", rng.standard_normal(A.shape[1]).astype(np.float32))
+        vclock[0] = 1.0  # every pending request is now far past its deadline
+        eng.poll()
+        eng.flush()
+
+    failures = []
+
+    dumps = flight.stats()["dumps"]
+    miss_dumps = [p for p in dumps if "deadline_miss" in p]
+    if not miss_dumps:
+        failures.append(f"no deadline_miss flight dump was written (dumps: {dumps})")
+    else:
+        with open(miss_dumps[0]) as f:
+            artifact = json.load(f)
+        events = artifact.get("traceEvents", [])
+        if artifact.get("otherData", {}).get("reason") != "deadline_miss":
+            failures.append(f"dump {miss_dumps[0]} has the wrong trigger reason")
+        if not any(e["name"] == "serve.flush" for e in events):
+            failures.append("the dump does not contain the offending flush span")
+        print(f"flight dump ok: {miss_dumps[0]} ({len(events)} ring events)")
+
+    health = eng.health(now=vclock[0])
+    status = health["matrices"].get("smoke", {}).get("status")
+    if status != "page":
+        failures.append(f"health status is {status!r}, expected 'page'")
+    else:
+        print(f"health ok: smoke pages (overall {health['status']})")
+
+    burn = eng.metrics.value(
+        "slo.burn_rate", matrix="smoke", slo="deadline", window="60s"
+    )
+    if burn <= 1.0:
+        failures.append(f"slo.burn_rate gauge is {burn}, expected a real burn")
+    else:
+        print(f"burn-rate gauge ok: {burn:.1f}x the sustainable pace")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("slo smoke: induced deadline misses tripped dump + gauges as required")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

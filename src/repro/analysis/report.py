@@ -7,6 +7,14 @@
 aggregates, amortized-preprocess ledger)::
 
     PYTHONPATH=src python -m repro.analysis.report --obs obs.json
+
+``--attribution PATH`` renders only the bandwidth-attribution join from a
+snapshot: achieved vs modeled bytes per (matrix, strategy, k_tiling),
+flagging plans below the modeled roofline
+(:mod:`repro.obs.attribution`)::
+
+    REPRO_OBS_DUMP=obs.json python benchmarks/bench_obs.py
+    PYTHONPATH=src python -m repro.analysis.report --attribution obs.json
 """
 from __future__ import annotations
 
@@ -113,7 +121,20 @@ def main() -> None:
         metavar="PATH",
         help="render the dashboard from a repro.obs.dump() snapshot instead",
     )
+    ap.add_argument(
+        "--attribution",
+        default=None,
+        metavar="PATH",
+        help="render achieved-vs-modeled bandwidth per (matrix, strategy, "
+        "k_tiling) from a repro.obs.dump() snapshot",
+    )
     args = ap.parse_args()
+    if args.attribution:
+        from repro.obs.attribution import attribution_rows, render_attribution
+
+        snapshot = json.loads(Path(args.attribution).read_text())
+        print(render_attribution(attribution_rows(snapshot)))
+        return
     if args.obs:
         from repro.obs.report import render
 

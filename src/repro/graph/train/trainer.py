@@ -161,6 +161,16 @@ class NodeClassifierTrainer:
             "lr": float(metrics["lr"]),
             "step": int(metrics["step"]),
         }
+        # one always-on flight instant per step (values are already host
+        # floats — no extra syncs); a post-mortem shows training progress
+        # around whatever anomaly triggered the dump
+        obs.get_flight().record(
+            "train.step",
+            model=self.model,
+            step=out["step"],
+            loss=out["loss"],
+            grad_norm=out["grad_norm"],
+        )
         if obs.enabled():
             # the step dict already forced these to host floats, so the
             # streams cost no extra syncs; indexed by optimizer step

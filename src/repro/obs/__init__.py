@@ -46,6 +46,8 @@ from .metrics import (  # noqa: F401  (re-exported surface)
     default_buckets,
     get_registry,
 )
+from .flight import FlightRecorder, get_flight  # noqa: F401
+from .slo import SLO, SLOEngine, worst_status  # noqa: F401
 from .trace import Span, Tracer, get_tracer  # noqa: F401
 
 __all__ = [
@@ -59,6 +61,7 @@ __all__ = [
     "series",
     "registry",
     "tracer",
+    "flight",
     "collect",
     "report",
     "dump",
@@ -73,7 +76,12 @@ __all__ = [
     "MetricRegistry",
     "Span",
     "Tracer",
+    "FlightRecorder",
+    "SLO",
+    "SLOEngine",
+    "worst_status",
     "get_registry",
+    "get_flight",
     "all_registries",
     "default_buckets",
 ]
@@ -184,6 +192,11 @@ def tracer() -> Tracer:
     return get_tracer()
 
 
+def flight() -> FlightRecorder:
+    """The process-global flight recorder (always on, bounded ring)."""
+    return get_flight()
+
+
 def collect() -> dict:
     """One snapshot of everything: all live registries + span summary."""
     t = get_tracer()
@@ -194,6 +207,7 @@ def collect() -> dict:
         "spans": t.summary(),
         "n_events": len(t.events),
         "dropped_events": t.dropped,
+        "flight": get_flight().stats(),
     }
 
 
@@ -229,9 +243,10 @@ def write_events(path) -> None:
 
 
 def reset() -> None:
-    """Clear the global registry and tracer (test isolation helper)."""
+    """Clear the global registry, tracer and flight ring (test isolation)."""
     get_registry().reset()
     get_tracer().clear()
+    get_flight().reset()
 
 
 def _env_truthy(v: Optional[str]) -> bool:

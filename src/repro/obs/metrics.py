@@ -377,11 +377,17 @@ class MetricRegistry:
             return list(self._metrics.values())
 
     def collect(self) -> dict:
-        """Snapshot of every metric, ready for JSON."""
-        return {
-            "registry": self.name,
-            "metrics": [m.snapshot() for m in self.metrics()],
-        }
+        """Snapshot of every metric, ready for JSON.
+
+        Sorted by (name, labels, type) so dumps and dashboards are
+        deterministic run-to-run — CI artifacts diff cleanly regardless of
+        metric creation order.
+        """
+        snaps = [m.snapshot() for m in self.metrics()]
+        snaps.sort(
+            key=lambda s: (s["name"], _label_key(s.get("labels") or {}), s["type"])
+        )
+        return {"registry": self.name, "metrics": snaps}
 
     def reset(self) -> None:
         with self._lock:

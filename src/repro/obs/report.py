@@ -111,6 +111,11 @@ def render(snapshot: dict) -> str:
                     ]
                 )
 
+    # deterministic dashboards: rows sorted by tag regardless of the order
+    # metrics were created in (CI artifacts diff cleanly run-to-run)
+    for table in (counters, gauges, hists, series):
+        table.sort(key=lambda r: r[0])
+
     lines: List[str] = ["== repro.obs report =="]
     lines.append("")
     lines += _rows("counters", ["name", "value"], counters)
@@ -150,6 +155,24 @@ def render(snapshot: dict) -> str:
             for s in spans
         ],
     )
+    # bandwidth attribution, when the serving engine recorded attr.* counters
+    from .attribution import attribution_rows, render_attribution
+
+    attr = attribution_rows(snapshot)
+    if attr:
+        lines.append(render_attribution(attr).rstrip())
+        lines.append("")
+
+    fl = snapshot.get("flight")
+    if fl and fl.get("recorded_total"):
+        lines.append(
+            f"-- flight recorder: {fl['events']}/{fl['capacity']} events "
+            f"({fl['recorded_total']} recorded, {fl['overwritten']} overwritten, "
+            f"{len(fl.get('dumps', []))} dumps, "
+            f"{fl.get('suppressed_triggers', 0)} suppressed triggers) --"
+        )
+        lines.append("")
+
     dropped = snapshot.get("dropped_events", 0)
     if dropped:
         lines.append(f"!! {dropped} trace events dropped (buffer full)")

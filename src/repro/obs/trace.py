@@ -94,7 +94,7 @@ class Tracer:
         for ev in self.snapshot():
             agg.setdefault(ev["name"], []).append(ev["dur"])
         out = []
-        for name in sorted(agg, key=lambda n: -sum(agg[n])):
+        for name in sorted(agg, key=lambda n: (-sum(agg[n]), n)):
             durs = agg[name]
             out.append(
                 {

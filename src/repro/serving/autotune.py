@@ -378,6 +378,17 @@ def autotune_partition(
             if us < best_us:
                 best_cfg, best_us = cand, us
         search_sp.annotate(best_us=round(best_us, 1))
+    if best_cfg is not None:
+        # searches are rare + expensive: a flight-ring record of the winner
+        # makes a later post-mortem show which geometry this plan serves
+        from repro.obs.flight import get_flight
+
+        get_flight().record(
+            "serve.autotune",
+            probe=probe.kind,
+            candidates=len(candidates),
+            best_us=round(best_us, 1),
+        )
     if best_cfg is None:  # empty candidate list: fall back to the heuristic
         return autotune_partition(csr, key=key, cache=cache, search=False)
     cache.put(

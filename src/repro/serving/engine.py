@@ -20,16 +20,31 @@ backing store is the registry's shared
 traffic; ``stats()`` is a view over it), and with ``repro.obs`` enabled
 the hot loop additionally emits flush spans, flush-reason counters,
 queue-depth gauges and deadline-miss counts.
+
+Three always-on layers ride the same loop regardless of the obs flag:
+
+* every flush lands in the process **flight recorder** ring, and a
+  deadline miss / latency anomaly / queue saturation triggers a
+  Perfetto-loadable post-mortem dump (:mod:`repro.obs.flight`);
+* per-flush **attribution counters** (``attr.launches`` /
+  ``attr.bytes_modeled`` / ``attr.compute_s``, labeled by matrix,
+  strategy and k_tiling) feed the achieved-vs-modeled bandwidth report
+  (:mod:`repro.obs.attribution`);
+* every completed request feeds the **SLO engine**, and
+  :meth:`ServingEngine.health` classifies per-matrix burn rates for the
+  QoS layer (:mod:`repro.obs.slo`).
 """
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Iterable, Optional
 
 import numpy as np
 
 from repro import obs
-from repro.kernels.ops import K_BUCKETS, bucket_k
+from repro.kernels.ops import K_BUCKETS, bucket_k, modeled_launch_bytes
+from repro.obs.flight import FlightRecorder, get_flight
+from repro.obs.slo import SLO, SLOEngine, worst_status
 
 from .batcher import MicroBatcher, SpMVRequest
 from .registry import MatrixRegistry
@@ -70,6 +85,10 @@ class Ticket:
 # recent requests — a long-lived engine must not grow per-request state
 _LATENCY_WINDOW = 4096
 
+# burn-rate gauges are refreshed every this many flushed batches (health()
+# and evaluate() always compute fresh — this only paces the passive gauges)
+_SLO_EVAL_EVERY = 32
+
 
 class ServingEngine:
     """Micro-batching SpMV server over a :class:`MatrixRegistry`.
@@ -78,6 +97,12 @@ class ServingEngine:
     fits one bucketed SpMM launch; ``clock`` supplies "now" for deadlines
     and latency accounting (inject a virtual clock for determinism —
     compute seconds are always wall time regardless).
+
+    ``slos`` declares the objectives :meth:`health` evaluates (default: a
+    99% deadline-hit-ratio SLO); ``queue_limit`` is the per-matrix pending
+    depth past which the flight recorder snapshots a ``queue_saturation``
+    dump (default ``4 * max_batch``); ``flight`` overrides the process
+    flight recorder (tests inject their own to isolate dump artifacts).
     """
 
     def __init__(
@@ -88,6 +113,9 @@ class ServingEngine:
         max_wait_s: float = 0.002,
         buckets: tuple = K_BUCKETS,
         clock=time.perf_counter,
+        slos: Optional[Iterable[SLO]] = None,
+        queue_limit: Optional[int] = None,
+        flight: Optional[FlightRecorder] = None,
     ):
         if max_batch > buckets[-1]:
             raise ValueError(
@@ -100,7 +128,14 @@ class ServingEngine:
         # one ledger with the registry: admission and traffic counters live
         # side by side, and both stats() views read the same store
         self.metrics = registry.metrics
+        self.flight = flight if flight is not None else get_flight()
+        self.queue_limit = (
+            queue_limit if queue_limit is not None else 4 * self.batcher.max_batch
+        )
+        # slo.* gauges ride the shared ledger so dump()/report() see them
+        self.slo = SLOEngine(slos, metrics=self.metrics, clock=clock)
         self._next_id = 0
+        self._batches = 0
 
     def submit(self, key: str, x) -> Ticket:
         """Enqueue ``y = A_key @ x``; returns immediately with a ticket."""
@@ -113,7 +148,12 @@ class ServingEngine:
         req = SpMVRequest(key=key, x=x, req_id=self._next_id, t_submit=self.clock())
         self._next_id += 1
         self.batcher.add(req)
-        obs.gauge("serving.queue_depth", matrix=key).set(self.batcher.pending(key))
+        depth = self.batcher.pending(key)
+        if obs.enabled():
+            obs.gauge("serving.queue_depth", matrix=key).set(depth)
+        # always-on saturation watch: an int compare until the queue blows
+        # past the limit, then a flight-recorder post-mortem dump
+        self.flight.observe_queue_depth(key, depth, self.queue_limit)
         return Ticket(self, req)
 
     def poll(self, now: Optional[float] = None) -> int:
@@ -149,14 +189,29 @@ class ServingEngine:
             Y = np.asarray(plan.matmat(X, bucketed=True, buckets=self.buckets))
             compute_s = time.perf_counter() - t0
         done = self.clock()
+        # the flush lands in the always-on flight ring *before* any trigger
+        # below fires, so a post-mortem dump contains the offending span
+        self.flight.record(
+            "serve.flush", t0=t0, dur_s=compute_s, matrix=key, reason=reason, k=k
+        )
+        launched_k = bucket_k(k, self.buckets)
         m = self.metrics
         m.counter("serving.requests", matrix=key).inc(len(batch))
         m.counter("serving.batches", matrix=key).inc()
         m.counter("serving.columns", matrix=key).inc(k)
-        m.counter("serving.padded_columns", matrix=key).inc(
-            bucket_k(k, self.buckets) - k
-        )
+        m.counter("serving.padded_columns", matrix=key).inc(launched_k - k)
         m.counter("serving.compute_s", matrix=key).inc(compute_s)
+        # bandwidth attribution: modeled bytes of the launch actually issued
+        # (at the padded bucket width) joined with the measured seconds —
+        # always live, labeled so attribution_rows() can group the join
+        attr_labels = dict(
+            matrix=key, strategy=plan.strategy, k_tiling=plan.k_tiling
+        )
+        m.counter("attr.launches", **attr_labels).inc()
+        m.counter("attr.bytes_modeled", **attr_labels).inc(
+            modeled_launch_bytes(plan.device, launched_k, plan.strategy, plan.k_tiling)
+        )
+        m.counter("attr.compute_s", **attr_labels).inc(compute_s)
         lat = m.histogram("serving.latency_s", window=_LATENCY_WINDOW, matrix=key)
         misses = 0
         for j, req in enumerate(batch):
@@ -164,8 +219,18 @@ class ServingEngine:
             req.t_done = done
             wait = done - req.t_submit
             lat.observe(wait)
-            if wait > self.batcher.max_wait_s:
+            hit = wait <= self.batcher.max_wait_s
+            if not hit:
                 misses += 1
+            self.slo.record(key, latency_s=wait, deadline_hit=hit, now=done)
+            self.flight.observe_latency(key, wait)
+        if misses:
+            self.flight.trigger(
+                "deadline_miss", matrix=key, misses=misses, flush_reason=reason, k=k
+            )
+        self._batches += 1
+        if self._batches % _SLO_EVAL_EVERY == 0:
+            self.slo.evaluate(now=done)  # refresh the passive slo.* gauges
         if obs.enabled():
             obs.counter("serving.flush", matrix=key, reason=reason).inc()
             obs.histogram("serving.batch_k", matrix=key).observe(k)
@@ -219,3 +284,27 @@ class ServingEngine:
                 "pending": self.batcher.pending(key),
             }
         return out
+
+    def health(self, now: Optional[float] = None) -> dict:
+        """SLO-based health view — the signal the QoS front-end consumes.
+
+        Per matrix: the multi-window burn-rate evaluation of every declared
+        :class:`~repro.obs.slo.SLO` plus the current queue depth; overall
+        ``status`` is the worst per-matrix classification (``ok`` <
+        ``warn`` < ``page``).  Always fresh — this evaluates now, it does
+        not read the passively-refreshed gauges.
+        """
+        now = self.clock() if now is None else now
+        evaluation = self.slo.evaluate(now=now)
+        matrices = {}
+        for key in sorted(evaluation):
+            slos = evaluation[key]
+            matrices[key] = {
+                "status": worst_status(s["status"] for s in slos.values()),
+                "slos": slos,
+                "queue_depth": self.batcher.pending(key),
+            }
+        return {
+            "status": worst_status(m["status"] for m in matrices.values()),
+            "matrices": matrices,
+        }

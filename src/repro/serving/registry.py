@@ -26,6 +26,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro import obs
+from repro.obs.flight import get_flight
 from repro.core.formats import CSRMatrix
 from repro.core.partition import PartitionConfig
 from repro.core.tile import HBPTiles, build_tiles
@@ -326,6 +327,15 @@ class MatrixRegistry:
         if tune_searched:
             m.counter("registry.autotune_searches", matrix=name).inc()
         m.gauge("registry.resident").set(len(self._plans))
+        # admissions are rare and expensive — always worth a flight-ring
+        # slot, so a post-mortem dump shows what was admitted and when
+        get_flight().record(
+            "serve.admit",
+            matrix=name,
+            nnz=csr.nnz,
+            preprocess_s=round(preprocess_s, 6),
+            k_tiling=served_tiling,
+        )
         return plan
 
     def admit_pair(

@@ -13,6 +13,7 @@ from inside it, so observability adds zero host syncs per iteration.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -82,22 +83,38 @@ def emit_history(solver: str, hist: jax.Array) -> None:
 
     Called by the solvers after their ``lax.while_loop`` returns — never
     inside it, so instrumentation costs no per-iteration host syncs.  A
-    no-op when obs is disabled, when the solver is itself under a ``jit``
-    trace (``hist`` is an abstract tracer — no values exist yet), or when
-    the history holds a single slot (``record_history=False``).  Blocked
+    no-op when the solver is itself under a ``jit`` trace (``hist`` is an
+    abstract tracer — no values exist yet) or when the history holds a
+    single slot (``record_history=False``); otherwise one summary instant
+    always lands in the flight ring, and the full residual series is
+    streamed only while obs is enabled.  Blocked
     RHS histories record the worst column per iteration (the convergence
     test is on the max).  Each call gets its own ``run=N``-labelled
     series, indexed by iteration.
     """
     from repro import obs
 
-    if not obs.enabled() or isinstance(hist, jax.core.Tracer):
+    if isinstance(hist, jax.core.Tracer):
         return
     vals = np.asarray(hist)
     if vals.shape[0] <= 1:  # record_history=False: nothing to stream
         return
     if vals.ndim > 1:
-        vals = np.nanmax(vals.reshape(vals.shape[0], -1), axis=1)
+        # unfilled iterations are all-NaN rows; silence nanmax's warning
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            vals = np.nanmax(vals.reshape(vals.shape[0], -1), axis=1)
+    # the always-on flight ring gets one instant per solve regardless of
+    # the obs flag — a post-mortem can show what converged around an anomaly
+    n = int(np.sum(~np.isnan(vals)))
+    obs.get_flight().record(
+        "solver.run",
+        solver=solver,
+        iters=max(n - 1, 0),
+        final_residual=float(vals[n - 1]) if n else None,
+    )
+    if not obs.enabled():
+        return
     runs = obs.counter("solver.runs", solver=solver)
     runs.inc()
     series = obs.series(f"solver.{solver}.residual", run=int(runs.value))

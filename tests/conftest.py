@@ -1,3 +1,5 @@
+import os
+
 import numpy as np
 import pytest
 
@@ -5,6 +7,24 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _flight_dumps_tmpdir(tmp_path_factory):
+    """Route flight-recorder trigger dumps into a session tmp dir.
+
+    The recorder is always on, and tests that legitimately induce
+    deadline misses (virtual-clock serving tests) would otherwise litter
+    the repo root with flight_*.json artifacts.
+    """
+    d = tmp_path_factory.mktemp("flight_dumps")
+    old = os.environ.get("REPRO_FLIGHT_DIR")
+    os.environ["REPRO_FLIGHT_DIR"] = str(d)
+    yield
+    if old is None:
+        os.environ.pop("REPRO_FLIGHT_DIR", None)
+    else:
+        os.environ["REPRO_FLIGHT_DIR"] = old
 
 
 def hypothesis_or_shim():

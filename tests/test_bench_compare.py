@@ -1,0 +1,81 @@
+"""The benchmark regression gate: thresholds, improvements, --update.
+
+The gate is load-bearing CI (a stale baseline silently masks later
+regressions), so its semantics are pinned here: regressions past the
+threshold fail, improvements past the threshold nag (never fail), and
+``--update`` rewrites the baseline without dropping records a partial run
+did not cover.
+"""
+import json
+
+import pytest
+
+from benchmarks.compare import load_records, main
+
+
+def _write(path, records):
+    path.write_text(json.dumps({"schema": 1, "benches": records}))
+    return str(path)
+
+
+def _rec(name, min_us):
+    return {"name": name, "min_us": min_us, "median_us": min_us * 1.1}
+
+
+@pytest.fixture()
+def paths(tmp_path):
+    base = _write(
+        tmp_path / "baseline.json",
+        [_rec("spmm/a", 100.0), _rec("spmm/b", 100.0), _rec("preprocess/x", 50.0)],
+    )
+    return tmp_path, base
+
+
+def test_gate_fails_on_regression(paths, capsys):
+    tmp_path, base = paths
+    cur = _write(tmp_path / "cur.json", [_rec("spmm/a", 130.0), _rec("spmm/b", 99.0)])
+    assert main([cur, "--baseline", base]) == 1
+    err = capsys.readouterr().err
+    assert "FAIL spmm/a" in err
+
+
+def test_gate_reports_improvements_without_failing(paths, capsys):
+    tmp_path, base = paths
+    # spmm/a improved 2x (past the 25% threshold), spmm/b only slightly
+    cur = _write(tmp_path / "cur.json", [_rec("spmm/a", 50.0), _rec("spmm/b", 95.0)])
+    assert main([cur, "--baseline", base]) == 0
+    out = capsys.readouterr().out
+    assert "IMPROVE spmm/a" in out
+    assert "OK   spmm/b" in out
+    assert "refresh it with --update" in out
+    assert "gate clean" in out
+
+
+def test_update_rewrites_baseline_keeping_uncovered_records(paths, capsys):
+    tmp_path, base = paths
+    cur = _write(
+        tmp_path / "cur.json", [_rec("spmm/a", 50.0), _rec("spmm/new", 10.0)]
+    )
+    assert main([cur, "--baseline", base, "--update"]) == 0
+    refreshed = load_records(base)
+    assert refreshed["spmm/a"]["min_us"] == 50.0  # refreshed from the run
+    assert "spmm/new" in refreshed  # new bench enters the baseline
+    assert refreshed["spmm/b"]["min_us"] == 100.0  # partial run keeps coverage
+    assert refreshed["preprocess/x"]["min_us"] == 50.0
+    payload = json.load(open(base))
+    names = [r["name"] for r in payload["benches"]]
+    assert names == sorted(names)  # deterministic artifact
+    # the refreshed baseline now gates the same run cleanly, no IMPROVE nag
+    assert main([cur, "--baseline", base]) == 0
+    assert "IMPROVE" not in capsys.readouterr().out
+
+
+def test_update_respects_prefix_filter(paths):
+    tmp_path, base = paths
+    cur = _write(
+        tmp_path / "cur.json", [_rec("spmm/a", 50.0), _rec("preprocess/x", 1.0)]
+    )
+    assert main([cur, "--baseline", base, "--update", "--prefix", "spmm"]) == 0
+    refreshed = load_records(base)
+    assert refreshed["spmm/a"]["min_us"] == 50.0
+    assert refreshed["preprocess/x"]["min_us"] == 50.0  # outside prefix: kept

@@ -5,6 +5,11 @@ percentiles agree with numpy (exact inside the sample window, bucket-
 interpolated beyond), span nesting/ordering survives the Chrome-trace
 export, counters hold up under concurrent bumps, and — the overhead
 contract — disabled mode retains exactly nothing.
+
+The always-on layers get their own sections: the flight recorder's ring
+wraparound, trigger dumps and concurrency; the SLO engine's burn-rate
+math and multi-window classification; and the bandwidth-attribution join
+rendered by ``analysis/report.py --attribution``.
 """
 import json
 import threading
@@ -13,8 +18,11 @@ import numpy as np
 import pytest
 
 from repro import obs
+from repro.obs.attribution import attribution_rows, render_attribution
+from repro.obs.flight import FlightRecorder
 from repro.obs.metrics import Histogram, MetricRegistry
 from repro.obs.report import amortization_ledger, render
+from repro.obs.slo import SLO, SLOEngine, worst_status
 from repro.obs.trace import Tracer
 
 
@@ -344,3 +352,418 @@ def test_dump_report_and_ledger(obs_on, tmp_path):
 def test_render_handles_empty_snapshot():
     out = render({"registries": [], "spans": []})
     assert "no metrics recorded" in out
+
+
+# --- deterministic ordering (CI artifacts must diff cleanly) ----------------
+
+
+def test_registry_collect_is_sorted_regardless_of_creation_order():
+    reg = MetricRegistry()
+    # scrambled creation order, mixed labels and types
+    reg.counter("z.last", matrix="B").inc()
+    reg.gauge("a.first", matrix="Z").set(1)
+    reg.counter("m.mid", matrix="B").inc()
+    reg.counter("m.mid", matrix="A").inc()
+    reg.gauge("a.first", matrix="A").set(2)
+    snap = reg.collect()
+    keys = [
+        (m["name"], tuple(sorted(m["labels"].items())), m["type"])
+        for m in snap["metrics"]
+    ]
+    assert keys == sorted(keys)
+    assert snap == reg.collect()  # stable across repeated collects
+
+
+def test_render_rows_are_sorted(obs_on):
+    obs.counter("zz.metric", matrix="B").inc()
+    obs.counter("aa.metric", matrix="A").inc()
+    obs.gauge("mm.gauge").set(1)
+    text = render(obs.collect())
+    assert text.index("aa.metric") < text.index("zz.metric")
+    assert render(obs.collect()) == text
+
+
+def test_span_summary_ties_break_by_name():
+    tr = Tracer()
+    # two zero-duration names: equal totals must still order deterministically
+    tr.add_event("b_span", 0.0, 0.0, 0, {})
+    tr.add_event("a_span", 0.0, 0.0, 0, {})
+    names = [s["name"] for s in tr.summary()]
+    assert names == ["a_span", "b_span"]
+
+
+# --- flight recorder --------------------------------------------------------
+
+
+def test_flight_ring_wraparound_keeps_newest():
+    fl = FlightRecorder(capacity=8)
+    for i in range(20):
+        fl.record("ev", i=i)
+    st = fl.stats()
+    assert st["recorded_total"] == 20
+    assert st["events"] == 8 and st["capacity"] == 8
+    assert st["overwritten"] == 12
+    kept = [e["args"]["i"] for e in fl.snapshot()]
+    assert kept == list(range(12, 20))  # oldest overwritten, order preserved
+
+
+def test_flight_span_records_duration_and_sampling():
+    fl = FlightRecorder(capacity=16, seed=0)
+    with fl.span("timed", matrix="A") as sp:
+        sp.annotate(k=4)
+    (ev,) = fl.snapshot()
+    assert ev["name"] == "timed" and ev["ph"] == "X"
+    assert ev["dur"] >= 0 and ev["args"] == {"matrix": "A", "k": 4}
+    # sample=0.0 never records; the returned no-op still context-manages
+    with fl.span("never", sample=0.0) as sp:
+        sp.annotate(x=1)
+    assert len(fl.snapshot()) == 1
+    # errors inside a sampled span are annotated, not swallowed
+    with pytest.raises(RuntimeError):
+        with fl.span("fails"):
+            raise RuntimeError("boom")
+    assert fl.snapshot()[-1]["args"]["error"] == "RuntimeError"
+
+
+def test_flight_trigger_writes_perfetto_loadable_dump(tmp_path):
+    fl = FlightRecorder(capacity=32, dump_dir=tmp_path)
+    fl.record("before", site="x")
+    path = fl.trigger("unit_test", detail="why")
+    assert path is not None
+    loaded = json.loads((tmp_path / "flight_unit_test_0.json").read_text())
+    names = [e["name"] for e in loaded["traceEvents"]]
+    assert names == ["before", "flight.trigger"]  # trigger lands in the ring
+    assert loaded["otherData"]["reason"] == "unit_test"
+    assert loaded["otherData"]["context"]["detail"] == "why"
+    # Chrome-trace invariants Perfetto relies on
+    ts = [e["ts"] for e in loaded["traceEvents"]]
+    assert ts == sorted(ts)
+    for e in loaded["traceEvents"]:
+        assert e["ph"] in ("X", "i")
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+        else:
+            assert e["s"] == "t"
+    assert fl.stats()["dumps"] == [str(path)]
+
+
+def test_flight_trigger_rate_limit_and_cap(tmp_path):
+    fl = FlightRecorder(
+        capacity=8, dump_dir=tmp_path, max_dumps=3, min_dump_interval_s=3600.0
+    )
+    assert fl.trigger("same") is not None
+    assert fl.trigger("same") is None  # rate-limited per reason
+    assert fl.trigger("other") is not None  # a different reason still dumps
+    assert fl.trigger("third") is not None
+    assert fl.trigger("fourth") is None  # global max_dumps cap
+    st = fl.stats()
+    assert len(st["dumps"]) == 3 and st["suppressed_triggers"] == 2
+
+
+def test_flight_latency_anomaly_detector(tmp_path):
+    fl = FlightRecorder(
+        capacity=64,
+        dump_dir=tmp_path,
+        latency_window=128,
+        latency_min_samples=16,
+        latency_factor=4.0,
+        latency_refresh=16,
+    )
+    # a stable baseline never triggers
+    for _ in range(64):
+        assert fl.observe_latency("site", 1e-3) is None
+    # a 100x spike past the rolling threshold does
+    path = fl.observe_latency("site", 0.1, matrix="A")
+    assert path is not None
+    loaded = json.load(open(path))
+    assert loaded["otherData"]["reason"] == "latency_anomaly"
+    assert loaded["otherData"]["context"]["site"] == "site"
+
+
+def test_flight_queue_depth_detector(tmp_path):
+    fl = FlightRecorder(capacity=8, dump_dir=tmp_path)
+    assert fl.observe_queue_depth("q", 3, 8) is None
+    assert fl.observe_queue_depth("q", 7, 8) is None
+    path = fl.observe_queue_depth("q", 8, 8)
+    assert path is not None
+    assert json.load(open(path))["otherData"]["reason"] == (
+        "queue_saturation"
+    )
+    assert fl.observe_queue_depth("q", 9, 0) is None  # limit 0 disables
+
+
+def test_flight_concurrent_record_and_trigger(tmp_path):
+    fl = FlightRecorder(capacity=64, dump_dir=tmp_path, min_dump_interval_s=0.0)
+    n_threads, per_thread = 8, 500
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        barrier.wait()
+        for i in range(per_thread):
+            fl.record("ev", tid=tid, i=i)
+            if i % 100 == 0:
+                fl.trigger(f"t{tid}")
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    st = fl.stats()
+    # every record landed exactly once (triggers add one ring event each)
+    assert st["recorded_total"] >= n_threads * per_thread
+    assert st["events"] == 64 and st["overwritten"] == st["recorded_total"] - 64
+    snap = fl.snapshot()
+    assert len(snap) == 64
+    assert all(e is not None for e in snap)  # no torn slots under contention
+    for p in st["dumps"]:  # every dump parses as a complete artifact
+        assert "traceEvents" in json.load(open(p))
+
+
+def test_flight_reset_and_global_accessor():
+    fl = obs.flight()
+    assert fl is obs.get_flight()
+    fl.record("something")
+    assert obs.collect()["flight"]["recorded_total"] >= 1
+    obs.reset()
+    assert obs.flight().stats()["recorded_total"] == 0
+
+
+# --- SLO engine -------------------------------------------------------------
+
+
+def test_slo_validation_and_budget():
+    slo = SLO("deadline", "deadline_hit_ratio", 0.99)
+    assert slo.budget == pytest.approx(0.01)
+    assert slo.good(123.0, True) and not slo.good(0.0, False)
+    lat = SLO("p99", "latency_p99", 0.005)
+    assert lat.budget == pytest.approx(0.01)
+    assert lat.good(0.004, False) and not lat.good(0.006, True)
+    with pytest.raises(ValueError):
+        SLO("bad", "nope", 0.5)
+    with pytest.raises(ValueError):
+        SLO("bad", "deadline_hit_ratio", 1.5)
+    with pytest.raises(ValueError):
+        SLO("bad", "latency_p99", 0.0)
+    with pytest.raises(ValueError):
+        SLO("bad", "deadline_hit_ratio", 0.99, windows=(60.0, 30.0))
+    with pytest.raises(ValueError):
+        SLOEngine([slo, SLO("deadline", "latency_p99", 1.0)])  # duplicate name
+
+
+def test_slo_burn_rates_and_paging():
+    clk = [1000.0]
+    eng = SLOEngine(
+        [SLO("deadline", "deadline_hit_ratio", 0.99, windows=(10.0, 60.0, 300.0))],
+        clock=lambda: clk[0],
+    )
+    # 100 requests in the last 10s, half missing their deadline:
+    # bad_ratio 0.5 / budget 0.01 = burn 50 >> fast_burn on both short windows
+    for i in range(100):
+        eng.record("A", latency_s=0.001, deadline_hit=(i % 2 == 0), now=1000.0 - i * 0.05)
+    out = eng.evaluate("A", now=1000.0)["A"]["deadline"]
+    assert out["status"] == "page"
+    w10 = out["windows"]["10s"]
+    assert w10["events"] == 100 and w10["bad"] == 50
+    assert w10["burn_rate"] == pytest.approx(50.0)
+    assert w10["attainment"] == pytest.approx(0.5)
+    # the gauges refreshed into the engine's metric registry
+    assert eng.metrics.value(
+        "slo.burn_rate", matrix="A", slo="deadline", window="10s"
+    ) == pytest.approx(50.0)
+
+
+def test_slo_warn_on_longest_window_only():
+    eng = SLOEngine(
+        [SLO("deadline", "deadline_hit_ratio", 0.9, windows=(10.0, 60.0, 300.0))]
+    )
+    # misses concentrated 100s ago: short windows are clean, the long one burns
+    for i in range(40):
+        eng.record("A", latency_s=0.001, deadline_hit=False, now=900.0 - i * 0.1)
+    for i in range(10):
+        eng.record("A", latency_s=0.001, deadline_hit=True, now=1000.0 - i * 0.1)
+    out = eng.evaluate("A", now=1000.0)["A"]["deadline"]
+    assert out["windows"]["10s"]["bad"] == 0
+    assert out["windows"]["300s"]["burn_rate"] >= 2.0
+    assert out["status"] == "warn"
+
+
+def test_slo_no_data_is_ok_not_outage():
+    eng = SLOEngine()
+    assert eng.evaluate() == {}
+    eng.record("A", latency_s=0.001, deadline_hit=True, now=100.0)
+    out = eng.evaluate("A", now=100.0 + 7200.0)["A"]["deadline"]
+    assert all(w["events"] == 0 for w in out["windows"].values())
+    assert all(w["burn_rate"] is None for w in out["windows"].values())
+    assert out["status"] == "ok"
+
+
+def test_slo_latency_objective_and_worst_status():
+    eng = SLOEngine([SLO("p99", "latency_p99", 0.005, windows=(60.0, 300.0))])
+    for i in range(50):
+        eng.record("A", latency_s=0.5, deadline_hit=True, now=100.0 + i * 0.01)
+    out = eng.evaluate("A", now=101.0)["A"]["p99"]
+    assert out["status"] == "page"  # every request blows the latency bound
+    assert worst_status(["ok", "warn"]) == "warn"
+    assert worst_status(["warn", "page", "ok"]) == "page"
+    assert worst_status([]) == "ok"
+
+
+# --- bandwidth attribution --------------------------------------------------
+
+
+def _attr_snapshot(bytes_modeled, measured_s):
+    labels = {"matrix": "A", "strategy": "fused", "k_tiling": "grid"}
+    return {
+        "registries": [
+            {
+                "registry": "serving",
+                "metrics": [
+                    {"name": "attr.launches", "labels": labels, "type": "counter",
+                     "value": 4},
+                    {"name": "attr.bytes_modeled", "labels": labels,
+                     "type": "counter", "value": bytes_modeled},
+                    {"name": "attr.compute_s", "labels": labels, "type": "counter",
+                     "value": measured_s},
+                    {"name": "serving.requests", "labels": {"matrix": "A"},
+                     "type": "counter", "value": 9},  # non-attr metrics ignored
+                ],
+            }
+        ]
+    }
+
+
+def test_attribution_rows_join_and_flag():
+    from repro.analysis.roofline import V5E
+
+    # runs at exactly half the modeled roofline: 0.5 fraction, not flagged
+    # at the default 0.5 threshold boundary? strictly-below flags, so equal
+    # fraction stays unflagged
+    snap = _attr_snapshot(bytes_modeled=V5E.hbm_bw, measured_s=2.0)
+    (row,) = attribution_rows(snap)
+    assert row["matrix"] == "A" and row["strategy"] == "fused"
+    assert row["launches"] == 4
+    assert row["achieved_gbps"] == pytest.approx(V5E.hbm_bw / 2 / 1e9)
+    assert row["roofline_fraction"] == pytest.approx(0.5)
+    assert not row["below_roofline"]
+    # 10x slower than modeled: flagged
+    (slow,) = attribution_rows(_attr_snapshot(V5E.hbm_bw, 10.0))
+    assert slow["below_roofline"]
+    text = render_attribution([slow])
+    assert "BELOW-ROOFLINE" in text and "re-evaluate" in text
+    assert "matrix" in text and "achieved_GB/s" in text
+
+
+def test_attribution_handles_empty_and_zero_time():
+    assert attribution_rows({"registries": []}) == []
+    assert "no attribution counters" in render_attribution([])
+    (row,) = attribution_rows(_attr_snapshot(1e9, 0.0))
+    assert row["achieved_gbps"] is None and not row["below_roofline"]
+
+
+def test_attribution_cli_mode(tmp_path, capsys, monkeypatch):
+    from repro.analysis import report as analysis_report
+
+    snap_path = tmp_path / "obs.json"
+    snap_path.write_text(json.dumps(_attr_snapshot(1e9, 10.0)))
+    monkeypatch.setattr(
+        "sys.argv", ["report", "--attribution", str(snap_path)]
+    )
+    analysis_report.main()
+    out = capsys.readouterr().out
+    assert "bandwidth attribution" in out and "BELOW-ROOFLINE" in out
+
+
+# --- serving integration: flight + SLO + gating -----------------------------
+
+
+def _serve_matrix(tmp_path, **engine_kw):
+    from repro.core.matrices import circuit
+    from repro.serving import MatrixRegistry, ServingEngine
+
+    reg = MatrixRegistry(cache_dir=tmp_path / "cache", search=False)
+    A = circuit(150, seed=1)
+    reg.admit(A, "A")
+    vclock = [0.0]
+    eng = ServingEngine(reg, clock=lambda: vclock[0], **engine_kw)
+    return reg, A, eng, vclock
+
+
+def test_induced_deadline_miss_dumps_flush_span(tmp_path):
+    """Acceptance criterion: a deadline miss produces a Perfetto-loadable
+    dump containing the offending serve.flush span."""
+    fl = FlightRecorder(capacity=256, dump_dir=tmp_path / "dumps")
+    reg, A, eng, vclock = _serve_matrix(
+        tmp_path, max_wait_s=0.001, max_batch=8, flight=fl
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+    vclock[0] = 1.0  # every pending request is now way past its deadline
+    eng.flush()
+    (dump_path,) = fl.stats()["dumps"]
+    loaded = json.load(open(dump_path))
+    assert loaded["otherData"]["reason"] == "deadline_miss"
+    assert loaded["otherData"]["context"]["matrix"] == "A"
+    flushes = [e for e in loaded["traceEvents"] if e["name"] == "serve.flush"]
+    assert flushes, "the offending flush span must be in the dump"
+    assert flushes[-1]["ph"] == "X" and flushes[-1]["dur"] > 0
+    assert flushes[-1]["args"]["matrix"] == "A"
+    # the SLO view pages on the same evidence
+    assert eng.health(now=vclock[0])["matrices"]["A"]["status"] == "page"
+
+
+def test_queue_saturation_triggers_dump(tmp_path):
+    fl = FlightRecorder(capacity=64, dump_dir=tmp_path / "dumps")
+    reg, A, eng, vclock = _serve_matrix(
+        tmp_path, max_wait_s=1e9, max_batch=8, queue_limit=3, flight=fl
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(3):  # third submit hits the limit
+        eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+    dumps = fl.stats()["dumps"]
+    assert len(dumps) == 1
+    assert json.load(open(dumps[0]))["otherData"]["reason"] == (
+        "queue_saturation"
+    )
+    eng.flush()
+
+
+def test_hot_loop_gating_is_consistent_when_disabled(tmp_path, monkeypatch):
+    """Satellite: with obs disabled the engine must never touch the gated
+    constructors — the disabled path allocates no label dicts and creates
+    no global-registry metrics."""
+    obs.reset()
+    assert not obs.enabled()
+
+    def boom(*a, **k):
+        raise AssertionError("gated obs constructor called on disabled path")
+
+    reg, A, eng, vclock = _serve_matrix(tmp_path, max_wait_s=1e9, max_batch=8)
+    rng = np.random.default_rng(0)
+    monkeypatch.setattr(obs, "counter", boom)
+    monkeypatch.setattr(obs, "gauge", boom)
+    monkeypatch.setattr(obs, "histogram", boom)
+    for _ in range(4):
+        eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+    eng.flush()
+    assert obs.registry().metrics() == []  # nothing leaked into the registry
+    # the always-live ledgers still worked
+    assert eng.metrics.value("serving.requests", matrix="A") == 4
+    assert eng.metrics.value("attr.launches", matrix="A", strategy=reg.strategy,
+                             k_tiling="grid") > 0
+
+
+def test_engine_attribution_counters_flow_to_report(tmp_path):
+    reg, A, eng, vclock = _serve_matrix(tmp_path, max_wait_s=1e9, max_batch=8)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+    eng.flush()
+    snap = obs.collect()
+    # rows group by (matrix, strategy, k_tiling) even across registries, so
+    # a not-yet-collected registry from an earlier test can't split the row
+    (row,) = [r for r in attribution_rows(snap) if r["matrix"] == "A"]
+    assert row["launches"] >= 1
+    assert row["bytes_modeled"] > 0 and row["measured_s"] > 0
+    assert "bandwidth attribution" in render(snap)

@@ -212,6 +212,45 @@ def test_engine_burst_drains_multiple_full_batches(two_matrices, registry):
     assert eng.stats()["A"]["batches"] == 3
 
 
+def test_engine_health_reflects_slo_burn(two_matrices, registry):
+    """health() is the QoS-facing view: clean traffic reads ok, a stalled
+    engine pages, and custom SLOs ride the same event stream."""
+    from repro.obs.slo import SLO
+
+    A, _ = two_matrices
+    plan = registry.admit(A, "A")
+    now = [0.0]
+    eng = ServingEngine(
+        registry,
+        max_wait_s=0.010,
+        max_batch=4,
+        clock=lambda: now[0],
+        slos=(
+            SLO("deadline", "deadline_hit_ratio", 0.99),
+            SLO("p99", "latency_p99", 5.0),  # generous: never violated here
+        ),
+    )
+    for _ in range(4):
+        eng.submit("A", np.ones(plan.shape[1], np.float32))
+    eng.poll()  # full batch flushes immediately: every deadline hit
+    h = eng.health(now=now[0])
+    assert h["status"] == "ok"
+    assert h["matrices"]["A"]["status"] == "ok"
+    assert set(h["matrices"]["A"]["slos"]) == {"deadline", "p99"}
+    # stall the next batch far past its deadline: the engine must page
+    for _ in range(4):
+        eng.submit("A", np.ones(plan.shape[1], np.float32))
+    now[0] = 1.0
+    eng.flush()
+    h = eng.health(now=now[0])
+    assert h["matrices"]["A"]["status"] == "page"
+    assert h["status"] == "page"
+    burn = h["matrices"]["A"]["slos"]["deadline"]["windows"]["60s"]["burn_rate"]
+    assert burn > 14  # half the traffic missed vs a 1% budget
+    # the latency SLO with its generous bound stays clean throughout
+    assert h["matrices"]["A"]["slos"]["p99"]["status"] == "ok"
+
+
 def test_ticket_result_forces_flush(two_matrices, registry):
     A, _ = two_matrices
     plan = registry.admit(A, "A")
