@@ -17,6 +17,13 @@ it to that with three measurements:
 * ``obs/flight_record`` — per-op cost of one always-on flight-recorder
   ring write: unlike the gated primitives this path has no off state, so
   its microcost IS the serving hot loop's telemetry floor.
+* ``obs/request_context`` — per-op cost of the always-on request-trace
+  path (mint a context, stamp its lifecycle, complete it into the
+  bounded log): the per-request tax every submit pays, gated by the same
+  regression pipeline as the flight ring.
+* ``obs/openmetrics_render`` — one full OpenMetrics exposition render of
+  a populated registry: the per-scrape cost a Prometheus endpoint pays
+  (off the serving hot path, but a runaway here would starve a scraper).
 
 All timings restore the obs enable state they found, and the registries
 are reset afterwards so a ``--trace`` run's artifact is not polluted by
@@ -95,6 +102,39 @@ def _micro_flight() -> None:
         fl.record("bench.flight_micro")
 
 
+def _micro_request_context() -> None:
+    from repro.obs.requesttrace import RequestLog, new_context
+
+    log = RequestLog()
+    for i in range(_MICRO_OPS):
+        ctx = new_context("bench", 0.0)  # the one per-request allocation
+        ctx.t_enqueue = 1e-6
+        ctx.t_flush_start = 2e-6
+        ctx.t_dispatch = 3e-6
+        ctx.t_complete = 4e-6
+        ctx.compute_s = 1e-6
+        ctx.batch_share = 0.125
+        ctx.batch_k = 8
+        ctx.flush_reason = "size"
+        ctx.deadline_hit = True
+        log.complete(ctx)
+
+
+def _render_registry():
+    """A populated standalone registry sized like a busy serving ledger."""
+    from repro.obs.metrics import MetricRegistry
+
+    reg = MetricRegistry(name="bench-render")
+    rng = np.random.default_rng(3)
+    for m in ("A", "B", "C", "D"):
+        reg.counter("serving.requests", matrix=m).inc(1000)
+        reg.gauge("serving.queue_depth", matrix=m).set(4)
+        h = reg.histogram("serving.latency_s", matrix=m)
+        for i, v in enumerate(rng.uniform(1e-5, 1e-2, 256)):
+            h.observe(float(v), exemplar=f"rb-{i:x}")
+    return reg
+
+
 def main(full: bool = False) -> None:
     n_req = 256 if full else 64
     repeats = 7 if full else 5
@@ -136,6 +176,28 @@ def main(full: bool = False) -> None:
         f"ns_per_op={1e9 * float(t) / _MICRO_OPS:.0f}",
         config={"ops": _MICRO_OPS},
     )
+
+    # the request-trace path is always on too: mint + stamp + complete
+    t = timeit(_micro_request_context, repeats=repeats)
+    emit(
+        "obs/request_context",
+        float(t) / _MICRO_OPS,
+        f"ns_per_op={1e9 * float(t) / _MICRO_OPS:.0f}",
+        config={"ops": _MICRO_OPS},
+    )
+
+    # per-scrape cost of the OpenMetrics exposition render
+    from repro.obs.export import render_openmetrics
+
+    render_reg = _render_registry()
+    t = timeit(lambda: render_openmetrics([render_reg]), repeats=repeats)
+    emit(
+        "obs/openmetrics_render",
+        t,
+        f"us_per_scrape={t.stats['median_us']:.0f}",
+        config={"matrices": 4, "hist_samples": 256},
+    )
+    del render_reg
 
     # snapshot before the registries in `keep` go out of scope (their
     # MetricRegistry instances are weakly aggregated into the dump)

@@ -1,0 +1,114 @@
+"""Scrape smoke: the OpenMetrics endpoint MUST serve parseable telemetry.
+
+CI guard for the exporter path: serve a little real traffic through a
+ServingEngine, start the scrape endpoint (``repro.obs.export.serve``),
+fetch ``/metrics`` the way a Prometheus would (``curl`` when available,
+urllib otherwise), then assert the exposition —
+
+* parses as OpenMetrics (:func:`repro.obs.export.parse_openmetrics` is
+  strict about TYPE families, suffixes, cumulative buckets and ``# EOF``);
+* carries the ``slo.burn_rate`` gauge family the burn-rate monitors
+  maintain;
+* carries at least one histogram **exemplar** linking a latency bucket to
+  a request trace id.
+
+``--out metrics.prom`` additionally writes the scraped text to a file so
+the CI job can upload it as an artifact next to ``TRACE_ci.json``.  Exits
+nonzero when anything is missing::
+
+    PYTHONPATH=src python examples/scrape_smoke.py --out metrics.prom
+"""
+import argparse
+import shutil
+import subprocess
+import sys
+import tempfile
+import urllib.request
+
+import numpy as np
+
+from repro.core.matrices import circuit
+from repro.obs import export
+from repro.serving import MatrixRegistry, ServingEngine
+
+
+def scrape(url: str) -> str:
+    """GET the endpoint like a real scraper: curl if present, else urllib."""
+    curl = shutil.which("curl")
+    if curl:
+        out = subprocess.run(
+            [curl, "-sSf", "--max-time", "10", url],
+            check=True,
+            capture_output=True,
+        )
+        return out.stdout.decode("utf-8")
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        return resp.read().decode("utf-8")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--out", default=None, metavar="PATH",
+        help="also write the scraped exposition to PATH (CI artifact)",
+    )
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as cache_dir:
+        reg = MatrixRegistry(cache_dir=cache_dir, search=False)
+        A = circuit(200, seed=11)
+        reg.admit(A, "scrape")
+        eng = ServingEngine(reg, max_batch=4)
+        rng = np.random.default_rng(1)
+        for _ in range(12):
+            eng.submit("scrape", rng.standard_normal(A.shape[1]).astype(np.float32))
+        eng.flush()
+        eng.health()  # populate the slo.* gauges the scrape must expose
+
+        failures = []
+        srv = export.serve(port=0, registries=[eng.metrics])
+        try:
+            text = scrape(srv.url)
+        finally:
+            srv.close()
+
+        try:
+            families = export.parse_openmetrics(text)
+            print(f"scrape ok: {len(text)} bytes, {len(families)} families parse")
+        except ValueError as e:
+            print(f"FAIL: exposition does not parse: {e}", file=sys.stderr)
+            return 1
+
+        if "slo_burn_rate" not in families:
+            failures.append(
+                f"slo_burn_rate family missing (got {sorted(families)})"
+            )
+        else:
+            print("slo.burn_rate gauges present")
+
+        exemplars = [
+            s["exemplar"]
+            for f in families.values()
+            for s in f["samples"]
+            if s.get("exemplar")
+        ]
+        if not any(e["labels"].get("trace_id") for e in exemplars):
+            failures.append("no trace_id exemplar anywhere in the exposition")
+        else:
+            print(f"{len(exemplars)} bucket exemplars carry trace ids")
+
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text)
+            print(f"wrote {args.out}")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("scrape smoke: endpoint serves parseable OpenMetrics with exemplars")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -73,13 +73,18 @@ def main() -> None:
         worst = max(worst, float(np.abs(ticket.result() - y_ref).max() / (np.abs(y_ref).max() + 1e-12)))
     print(f"40 requests served; bitwise == sequential; max rel err vs CSR: {worst:.2e}")
 
+    def ms(v):
+        # percentiles/amortization are None for a matrix with no completed
+        # requests yet — print "n/a", never crash on the empty window
+        return "n/a" if v is None else f"{1e3 * v:.1f}ms"
+
     for key, s in sorted(engine.stats().items()):
         print(
             f"stats[{key}]: requests={s['requests']} batches={s['batches']} "
             f"mean_batch_k={s['mean_batch_k']:.1f} occupancy={s['occupancy']:.2f} "
             f"pad_fraction={s['pad_fraction']:.2f} "
-            f"p50={1e3 * s['latency_p50_s']:.1f}ms p99={1e3 * s['latency_p99_s']:.1f}ms "
-            f"amortized_preprocess={1e3 * s['amortized_preprocess_s']:.1f}ms/req"
+            f"p50={ms(s['latency_p50_s'])} p99={ms(s['latency_p99_s'])} "
+            f"amortized_preprocess={ms(s['amortized_preprocess_s'])}/req"
         )
 
     if obs.enabled():

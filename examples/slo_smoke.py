@@ -1,14 +1,18 @@
 """SLO smoke: induced deadline misses MUST trip the always-on telemetry.
 
-Nightly-CI guard for the flight-recorder + SLO path: serve a small matrix
-on a virtual clock, stall it long enough that every pending request
-misses its deadline, then assert the failure left the evidence a real
-outage would need —
+Nightly-CI guard for the flight-recorder + SLO + request-trace path:
+serve a small matrix on a virtual clock, stall it long enough that every
+pending request misses its deadline, then assert the failure left the
+evidence a real outage would need —
 
 * a ``flight_deadline_miss_*.json`` post-mortem dump (Perfetto-loadable)
-  containing the offending ``serve.flush`` span;
+  containing the offending ``serve.flush`` span, whose trigger event
+  names the **trace ids** of the late requests;
 * a burning ``slo.burn_rate`` gauge and a paging
-  :meth:`ServingEngine.health` view.
+  :meth:`ServingEngine.health` view;
+* the same late trace ids as **exemplars** on the ``serving.latency_s``
+  histogram scraped live from the OpenMetrics endpoint
+  (``repro.obs.export.serve``) — the dump and the scrape join on the id.
 
 Exits nonzero when any of it is missing, so a regression that silently
 disables the always-on path fails the nightly job::
@@ -18,11 +22,14 @@ disables the always-on path fails the nightly job::
 import json
 import sys
 import tempfile
+import urllib.request
 
 import numpy as np
 
 from repro.core.matrices import circuit
+from repro.obs import export
 from repro.obs.flight import FlightRecorder
+from repro.obs.requesttrace import RequestLog
 from repro.serving import MatrixRegistry, ServingEngine
 
 
@@ -36,7 +43,7 @@ def main() -> int:
         vclock = [0.0]
         eng = ServingEngine(
             reg, max_wait_s=0.001, max_batch=8, clock=lambda: vclock[0],
-            flight=flight,
+            flight=flight, request_log=RequestLog(),
         )
         rng = np.random.default_rng(0)
         for i in range(16):
@@ -47,6 +54,13 @@ def main() -> int:
         eng.flush()
 
     failures = []
+
+    # the request log knows exactly which requests burned their deadline
+    late_ids = {
+        c.trace_id for c in eng.request_log.contexts() if c.deadline_hit is False
+    }
+    if not late_ids:
+        failures.append("request log recorded no deadline-missing requests")
 
     dumps = flight.stats()["dumps"]
     miss_dumps = [p for p in dumps if "deadline_miss" in p]
@@ -60,7 +74,51 @@ def main() -> int:
             failures.append(f"dump {miss_dumps[0]} has the wrong trigger reason")
         if not any(e["name"] == "serve.flush" for e in events):
             failures.append("the dump does not contain the offending flush span")
-        print(f"flight dump ok: {miss_dumps[0]} ({len(events)} ring events)")
+        # the trigger event must name the offending requests by trace id
+        triggers = [e for e in events if e["name"] == "flight.trigger"]
+        dump_ids = set()
+        for e in triggers:
+            dump_ids.update(e.get("args", {}).get("trace_ids") or [])
+        if not dump_ids:
+            failures.append("the trigger event carries no trace_ids")
+        elif not dump_ids <= late_ids:
+            failures.append(
+                f"dump trace_ids {sorted(dump_ids)} are not the late requests "
+                f"{sorted(late_ids)}"
+            )
+        else:
+            print(
+                f"flight dump ok: {miss_dumps[0]} ({len(events)} ring events, "
+                f"{len(dump_ids)} late trace ids named)"
+            )
+
+    # the same trace ids must be scrapable as histogram exemplars
+    srv = export.serve(port=0, registries=[eng.metrics])
+    try:
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            text = resp.read().decode("utf-8")
+        families = export.parse_openmetrics(text)
+        lat = families.get("serving_latency_s")
+        if lat is None:
+            failures.append("scrape has no serving_latency_s family")
+        else:
+            scraped_ids = {
+                s["exemplar"]["labels"].get("trace_id")
+                for s in lat["samples"]
+                if s.get("exemplar")
+            }
+            if not scraped_ids & late_ids:
+                failures.append(
+                    f"no late trace id appears as a scraped exemplar "
+                    f"(scraped {sorted(scraped_ids)}, late {sorted(late_ids)})"
+                )
+            else:
+                print(
+                    f"scrape ok: {srv.url} exposes "
+                    f"{len(scraped_ids & late_ids)} late trace ids as exemplars"
+                )
+    finally:
+        srv.close()
 
     health = eng.health(now=vclock[0])
     status = health["matrices"].get("smoke", {}).get("status")

@@ -15,6 +15,13 @@ flagging plans below the modeled roofline
 
     REPRO_OBS_DUMP=obs.json python benchmarks/bench_obs.py
     PYTHONPATH=src python -m repro.analysis.report --attribution obs.json
+
+``--requests PATH`` renders the slowest-N request waterfall from a
+snapshot's request log: per-request queue-wait vs compute-share
+decomposition, trace ids included so rows join to flight dumps and
+histogram exemplars (``--top`` bounds N)::
+
+    PYTHONPATH=src python -m repro.analysis.report --requests obs.json --top 10
 """
 from __future__ import annotations
 
@@ -128,7 +135,26 @@ def main() -> None:
         help="render achieved-vs-modeled bandwidth per (matrix, strategy, "
         "k_tiling) from a repro.obs.dump() snapshot",
     )
+    ap.add_argument(
+        "--requests",
+        default=None,
+        metavar="PATH",
+        help="render the slowest-N request waterfall (queue wait vs compute "
+        "share, trace ids) from a repro.obs.dump() snapshot",
+    )
+    ap.add_argument(
+        "--top",
+        type=int,
+        default=20,
+        help="how many requests the --requests waterfall shows (default 20)",
+    )
     args = ap.parse_args()
+    if args.requests:
+        from repro.obs.requesttrace import waterfall
+
+        snapshot = json.loads(Path(args.requests).read_text())
+        print(waterfall(snapshot, n=args.top))
+        return
     if args.attribution:
         from repro.obs.attribution import attribution_rows, render_attribution
 

@@ -49,12 +49,22 @@ from .metrics import (  # noqa: F401  (re-exported surface)
 from .flight import FlightRecorder, get_flight  # noqa: F401
 from .slo import SLO, SLOEngine, worst_status  # noqa: F401
 from .trace import Span, Tracer, get_tracer  # noqa: F401
+from .requesttrace import (  # noqa: F401
+    RequestContext,
+    RequestLog,
+    get_request_log,
+    mint_trace_id,
+    new_context,
+    waterfall,
+)
+from . import export  # noqa: F401  (repro.obs.export.serve(port) is the API)
 
 __all__ = [
     "enabled",
     "enable",
     "disable",
     "span",
+    "flow",
     "counter",
     "gauge",
     "histogram",
@@ -62,6 +72,7 @@ __all__ = [
     "registry",
     "tracer",
     "flight",
+    "request_log",
     "collect",
     "report",
     "dump",
@@ -77,13 +88,20 @@ __all__ = [
     "Span",
     "Tracer",
     "FlightRecorder",
+    "RequestContext",
+    "RequestLog",
     "SLO",
     "SLOEngine",
     "worst_status",
     "get_registry",
     "get_flight",
+    "get_request_log",
+    "mint_trace_id",
+    "new_context",
+    "waterfall",
     "all_registries",
     "default_buckets",
+    "export",
 ]
 
 
@@ -105,7 +123,7 @@ class _Noop:
     def set(self, v):
         pass
 
-    def observe(self, v):
+    def observe(self, v, exemplar=None):
         pass
 
     def append(self, value, index=None):
@@ -163,6 +181,17 @@ def span(name: str, **args):
     return get_tracer().span(name, **args) if _enabled else NOOP
 
 
+def flow(name: str, fid: str, phase: str = "s", **args) -> None:
+    """Emit one Chrome-trace flow event (no-op while disabled).
+
+    ``phase`` is ``"s"`` (start), ``"t"`` (step) or ``"f"`` (finish,
+    binding to the enclosing slice); ``fid`` — the request trace id —
+    joins both ends of the Perfetto arrow.
+    """
+    if _enabled:
+        get_tracer().flow(name, fid, phase, **args)
+
+
 def counter(name: str, **labels):
     return get_registry().counter(name, **labels) if _enabled else NOOP
 
@@ -197,6 +226,11 @@ def flight() -> FlightRecorder:
     return get_flight()
 
 
+def request_log() -> RequestLog:
+    """The process-global request log (always on, bounded window)."""
+    return get_request_log()
+
+
 def collect() -> dict:
     """One snapshot of everything: all live registries + span summary."""
     t = get_tracer()
@@ -208,6 +242,7 @@ def collect() -> dict:
         "n_events": len(t.events),
         "dropped_events": t.dropped,
         "flight": get_flight().stats(),
+        "requests": get_request_log().snapshot(),
     }
 
 
@@ -243,10 +278,12 @@ def write_events(path) -> None:
 
 
 def reset() -> None:
-    """Clear the global registry, tracer and flight ring (test isolation)."""
+    """Clear the global registry, tracer, flight ring and request log
+    (test isolation)."""
     get_registry().reset()
     get_tracer().clear()
     get_flight().reset()
+    get_request_log().clear()
 
 
 def _env_truthy(v: Optional[str]) -> bool:

@@ -31,6 +31,7 @@ from __future__ import annotations
 import json
 import os
 import random
+import re
 import threading
 import time
 from collections import deque
@@ -38,6 +39,11 @@ from pathlib import Path
 from typing import Dict, List, Optional
 
 __all__ = ["FlightRecorder", "get_flight"]
+
+
+def _safe_token(s: str, maxlen: int = 40) -> str:
+    """Filesystem-safe slice of a trace id for dump filenames."""
+    return re.sub(r"[^A-Za-z0-9_.-]", "", s)[:maxlen]
 
 
 class _NoopSpan:
@@ -224,13 +230,17 @@ class FlightRecorder:
     # --- triggers / dumps --------------------------------------------------
 
     def trigger(self, reason: str, **context) -> Optional[str]:
-        """Snapshot the ring to ``flight_<reason>_<seq>.json``.
+        """Snapshot the ring to ``flight_<reason>_<seq>[_<trace>].json``.
 
         Rate-limited: at most one dump per ``reason`` per
         ``min_dump_interval_s`` and ``max_dumps`` total per process
         (suppressed triggers are counted, not lost silently).  The trigger
         itself lands in the ring first, so the artifact records why it
-        exists.  Returns the path written, or None when suppressed.
+        exists.  A ``trace_ids=[...]`` context entry names the offending
+        requests: it rides the trigger event and the dump's context, and
+        the first id is appended to the filename so an on-disk post-mortem
+        directory can be grepped by request.  Returns the path written,
+        or None when suppressed.
         """
         now = time.time()
         with self._lock:
@@ -250,7 +260,13 @@ class FlightRecorder:
             else os.environ.get("REPRO_FLIGHT_DIR", ".")
         )
         directory.mkdir(parents=True, exist_ok=True)
-        path = directory / f"flight_{reason}_{seq}.json"
+        stem = f"flight_{reason}_{seq}"
+        trace_ids = context.get("trace_ids")
+        if trace_ids:
+            tok = _safe_token(str(trace_ids[0]))
+            if tok:
+                stem = f"{stem}_{tok}"
+        path = directory / f"{stem}.json"
         payload = {
             "traceEvents": self.snapshot(),
             "displayTimeUnit": "ms",
@@ -307,6 +323,10 @@ class FlightRecorder:
 def _jsonable(v):
     if isinstance(v, (str, int, float, bool)) or v is None:
         return v
+    if isinstance(v, (list, tuple)):
+        # bounded: ring slots must stay small even if a caller passes a
+        # large batch's trace-id list by mistake
+        return [_jsonable(x) for x in v[:64]]
     try:
         return float(v)
     except (TypeError, ValueError):

@@ -140,9 +140,18 @@ class Histogram(_Metric):
     observation, and falls back to linear interpolation inside the bucket
     bounds once observations have been evicted — bounded error, bounded
     memory, regardless of traffic volume.
+
+    ``observe(v, exemplar=trace_id)`` additionally keeps the **most
+    recent exemplar per bucket** (one ``(trace_id, value)`` slot, lazily
+    allocated on the first exemplar ever seen), so a p99 outlier bucket
+    links straight to the trace that landed in it — the OpenMetrics
+    exporter renders them as ``# {trace_id="..."} v`` bucket exemplars.
     """
 
-    __slots__ = ("bounds", "bucket_counts", "count", "total", "vmin", "vmax", "_window")
+    __slots__ = (
+        "bounds", "bucket_counts", "count", "total", "vmin", "vmax",
+        "_window", "_exemplars",
+    )
 
     def __init__(
         self,
@@ -164,8 +173,9 @@ class Histogram(_Metric):
         self.vmin = math.inf
         self.vmax = -math.inf
         self._window = deque(maxlen=window) if window > 0 else None
+        self._exemplars: Optional[list] = None  # per-bucket (trace_id, value)
 
-    def observe(self, v: float) -> None:
+    def observe(self, v: float, exemplar: Optional[str] = None) -> None:
         v = float(v)
         idx = int(np.searchsorted(self.bounds, v, side="left"))
         with self._lock:
@@ -176,6 +186,29 @@ class Histogram(_Metric):
             self.vmax = max(self.vmax, v)
             if self._window is not None:
                 self._window.append(v)
+            if exemplar is not None:
+                if self._exemplars is None:
+                    self._exemplars = [None] * (self.bounds.size + 1)
+                self._exemplars[idx] = (str(exemplar), v)
+
+    def exemplars(self) -> List[dict]:
+        """The retained per-bucket exemplars, ascending by bucket.
+
+        Each entry carries the bucket's upper bound (``math.inf`` for the
+        overflow slot), the exemplar's observed value, and its trace id —
+        the join key back to flight dumps and flow events.
+        """
+        with self._lock:
+            if self._exemplars is None:
+                return []
+            kept = list(enumerate(self._exemplars))
+        out = []
+        for i, ex in kept:
+            if ex is None:
+                continue
+            le = float(self.bounds[i]) if i < self.bounds.size else math.inf
+            out.append({"le": le, "trace_id": ex[0], "value": ex[1]})
+        return out
 
     @property
     def mean(self) -> float:
@@ -225,6 +258,9 @@ class Histogram(_Metric):
         }
         for q in (0.50, 0.95, 0.99):
             snap[f"p{int(q * 100)}"] = self.percentile(q)
+        ex = self.exemplars()
+        if ex:
+            snap["exemplars"] = ex
         return snap
 
 

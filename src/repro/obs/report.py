@@ -14,8 +14,10 @@ __all__ = ["render", "amortization_ledger"]
 
 
 def _fmt(v, unit: str = "") -> str:
+    # empty-window percentiles and unset fields arrive as None — render a
+    # readable placeholder, never crash and never print a bare "None"
     if v is None:
-        return "-"
+        return "n/a"
     if isinstance(v, float):
         if v != 0 and (abs(v) < 1e-3 or abs(v) >= 1e6):
             return f"{v:.3e}{unit}"
@@ -161,6 +163,13 @@ def render(snapshot: dict) -> str:
     attr = attribution_rows(snapshot)
     if attr:
         lines.append(render_attribution(attr).rstrip())
+        lines.append("")
+
+    # per-request decomposition, when the snapshot carries a request log
+    if snapshot.get("requests"):
+        from .requesttrace import waterfall
+
+        lines.append(waterfall(snapshot, n=5).rstrip())
         lines.append("")
 
     fl = snapshot.get("flight")

@@ -71,6 +71,38 @@ class Tracer:
         }
         if args:
             ev["args"] = {k: _jsonable(v) for k, v in args.items()}
+        self._append(ev)
+
+    def flow(
+        self, name: str, fid: str, phase: str = "s", t: Optional[float] = None, **args
+    ) -> None:
+        """Append one Chrome-trace **flow event** (``ph`` s/t/f).
+
+        Flow events draw arrows between slices in Perfetto: a ``"s"``
+        (start) at submit time and an ``"f"`` (finish, binding to the
+        enclosing slice) inside the flush span connect a request's
+        submission to the batch that served it.  ``fid`` is the flow id —
+        the request's trace id — shared by both ends of the arrow.
+        """
+        if phase not in ("s", "t", "f"):
+            raise ValueError(f"flow phase must be s, t or f, got {phase!r}")
+        t = time.perf_counter() if t is None else t
+        ev = {
+            "name": name,
+            "ph": phase,
+            "cat": "request",
+            "id": str(fid),
+            "ts": (t - self.epoch) * 1e6,
+            "pid": os.getpid(),
+            "tid": threading.get_ident(),
+        }
+        if phase == "f":
+            ev["bp"] = "e"  # bind to the enclosing slice, not the next one
+        if args:
+            ev["args"] = {k: _jsonable(v) for k, v in args.items()}
+        self._append(ev)
+
+    def _append(self, ev: dict) -> None:
         with self._lock:
             if len(self.events) >= self.max_events:
                 self.dropped += 1
@@ -89,9 +121,14 @@ class Tracer:
             self.dropped = 0
 
     def summary(self) -> List[dict]:
-        """Per-span-name aggregate: count, total/mean/max duration (ms)."""
+        """Per-span-name aggregate: count, total/mean/max duration (ms).
+
+        Flow events carry no duration and are skipped — they annotate
+        causality, not time spent."""
         agg: Dict[str, List[float]] = {}
         for ev in self.snapshot():
+            if "dur" not in ev:
+                continue
             agg.setdefault(ev["name"], []).append(ev["dur"])
         out = []
         for name in sorted(agg, key=lambda n: (-sum(agg[n]), n)):
@@ -130,6 +167,8 @@ class Tracer:
 def _jsonable(v):
     if isinstance(v, (str, int, float, bool)) or v is None:
         return v
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
     try:
         return float(v)
     except (TypeError, ValueError):

@@ -37,6 +37,9 @@ class SpMVRequest:
     t_submit: float
     t_done: Optional[float] = None
     result: Optional[np.ndarray] = None
+    # the request-scoped trace context (repro.obs.requesttrace.RequestContext);
+    # typed loosely so the pure queueing module stays obs-import-free
+    ctx: Optional[object] = None
 
     @property
     def done(self) -> bool:

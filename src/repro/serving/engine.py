@@ -44,6 +44,7 @@ import numpy as np
 from repro import obs
 from repro.kernels.ops import K_BUCKETS, bucket_k, modeled_launch_bytes
 from repro.obs.flight import FlightRecorder, get_flight
+from repro.obs.requesttrace import RequestContext, RequestLog, get_request_log, new_context
 from repro.obs.slo import SLO, SLOEngine, worst_status
 
 from .batcher import MicroBatcher, SpMVRequest
@@ -64,6 +65,18 @@ class Ticket:
     @property
     def req_id(self) -> int:
         return self._req.req_id
+
+    @property
+    def trace_id(self) -> Optional[str]:
+        """The request's trace id — the join key into exemplars, flight
+        dumps and flow events."""
+        ctx = self._req.ctx
+        return ctx.trace_id if ctx is not None else None
+
+    @property
+    def context(self) -> Optional[RequestContext]:
+        """The live request context (stamps fill in as the request moves)."""
+        return self._req.ctx
 
     def done(self) -> bool:
         return self._req.done
@@ -116,6 +129,7 @@ class ServingEngine:
         slos: Optional[Iterable[SLO]] = None,
         queue_limit: Optional[int] = None,
         flight: Optional[FlightRecorder] = None,
+        request_log: Optional[RequestLog] = None,
     ):
         if max_batch > buckets[-1]:
             raise ValueError(
@@ -129,6 +143,9 @@ class ServingEngine:
         # side by side, and both stats() views read the same store
         self.metrics = registry.metrics
         self.flight = flight if flight is not None else get_flight()
+        # completed RequestContexts land here; the process-global log by
+        # default so dump()/--requests see every engine's traffic
+        self.request_log = request_log if request_log is not None else get_request_log()
         self.queue_limit = (
             queue_limit if queue_limit is not None else 4 * self.batcher.max_batch
         )
@@ -145,12 +162,24 @@ class ServingEngine:
             raise ValueError(
                 f"x has shape {x.shape}, matrix {key!r} expects ({plan.shape[1]},)"
             )
-        req = SpMVRequest(key=key, x=x, req_id=self._next_id, t_submit=self.clock())
+        t_submit = self.clock()
+        # the context is the single per-request allocation this path makes;
+        # every later lifecycle stamp is a plain attribute write on it
+        req = SpMVRequest(
+            key=key,
+            x=x,
+            req_id=self._next_id,
+            t_submit=t_submit,
+            ctx=new_context(key, t_submit),
+        )
         self._next_id += 1
         self.batcher.add(req)
+        req.ctx.t_enqueue = self.clock()
         depth = self.batcher.pending(key)
         if obs.enabled():
             obs.gauge("serving.queue_depth", matrix=key).set(depth)
+            # flow start: the submit end of the Perfetto submit→flush arrow
+            obs.flow("request", req.ctx.trace_id, "s", matrix=key)
         # always-on saturation watch: an int compare until the queue blows
         # past the limit, then a flight-recorder post-mortem dump
         self.flight.observe_queue_depth(key, depth, self.queue_limit)
@@ -182,17 +211,36 @@ class ServingEngine:
         if not batch:
             return 0
         plan = self.registry.get(key)
+        t_flush = self.clock()
+        for req in batch:
+            if req.ctx is not None:
+                req.ctx.t_flush_start = t_flush
+                req.ctx.flush_reason = reason
         X = MicroBatcher.stack(batch)  # [n, k]
         k = X.shape[1]
         with obs.span("serve.flush", matrix=key, reason=reason, k=k):
+            t_dispatch = self.clock()
             t0 = time.perf_counter()
             Y = np.asarray(plan.matmat(X, bucketed=True, buckets=self.buckets))
             compute_s = time.perf_counter() - t0
+            if obs.enabled():
+                # flow finish inside the span so bp="e" binds the arrow to
+                # this flush slice — one arrow per coalesced request
+                for req in batch:
+                    if req.ctx is not None:
+                        obs.flow("request", req.ctx.trace_id, "f", matrix=key)
         done = self.clock()
+        trace_ids = [r.ctx.trace_id for r in batch if r.ctx is not None]
         # the flush lands in the always-on flight ring *before* any trigger
         # below fires, so a post-mortem dump contains the offending span
         self.flight.record(
-            "serve.flush", t0=t0, dur_s=compute_s, matrix=key, reason=reason, k=k
+            "serve.flush",
+            t0=t0,
+            dur_s=compute_s,
+            matrix=key,
+            reason=reason,
+            k=k,
+            trace_ids=trace_ids,
         )
         launched_k = bucket_k(k, self.buckets)
         m = self.metrics
@@ -213,20 +261,42 @@ class ServingEngine:
         )
         m.counter("attr.compute_s", **attr_labels).inc(compute_s)
         lat = m.histogram("serving.latency_s", window=_LATENCY_WINDOW, matrix=key)
+        share = 1.0 / len(batch)
         misses = 0
+        late = []  # trace ids of the requests that burned the deadline
         for j, req in enumerate(batch):
             req.result = Y[:, j]
             req.t_done = done
             wait = done - req.t_submit
-            lat.observe(wait)
             hit = wait <= self.batcher.max_wait_s
             if not hit:
                 misses += 1
+            ctx = req.ctx
+            if ctx is not None:
+                ctx.t_dispatch = t_dispatch
+                ctx.t_complete = done
+                ctx.compute_s = compute_s
+                ctx.batch_share = share
+                ctx.batch_k = k
+                ctx.deadline_hit = hit
+                # the trace id rides the latency histogram as the bucket
+                # exemplar: a p99 outlier bucket names its request
+                lat.observe(wait, exemplar=ctx.trace_id)
+                self.request_log.complete(ctx)
+                if not hit:
+                    late.append(ctx.trace_id)
+            else:
+                lat.observe(wait)
             self.slo.record(key, latency_s=wait, deadline_hit=hit, now=done)
             self.flight.observe_latency(key, wait)
         if misses:
             self.flight.trigger(
-                "deadline_miss", matrix=key, misses=misses, flush_reason=reason, k=k
+                "deadline_miss",
+                matrix=key,
+                misses=misses,
+                flush_reason=reason,
+                k=k,
+                trace_ids=late,
             )
         self._batches += 1
         if self._batches % _SLO_EVAL_EVERY == 0:

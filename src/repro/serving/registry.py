@@ -27,6 +27,7 @@ import numpy as np
 
 from repro import obs
 from repro.obs.flight import get_flight
+from repro.obs.requesttrace import mint_trace_id
 from repro.core.formats import CSRMatrix
 from repro.core.partition import PartitionConfig
 from repro.core.tile import HBPTiles, build_tiles
@@ -264,7 +265,10 @@ class MatrixRegistry:
 
         from repro.kernels import ops
 
-        with obs.span("serve.admit", matrix=name, nnz=csr.nnz) as sp:
+        # admissions get trace ids too (kind "a"): the one-time preprocess
+        # cost is attributable in dumps the same way requests are
+        admit_id = mint_trace_id("a")
+        with obs.span("serve.admit", matrix=name, nnz=csr.nnz, trace_id=admit_id) as sp:
             t0 = time.perf_counter()
             # the measured search ranks candidates under the served contract;
             # "auto" ranks under the default grid, then picks per matrix below
@@ -335,6 +339,7 @@ class MatrixRegistry:
             nnz=csr.nnz,
             preprocess_s=round(preprocess_s, 6),
             k_tiling=served_tiling,
+            trace_id=admit_id,
         )
         return plan
 

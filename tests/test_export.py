@@ -1,0 +1,212 @@
+"""The OpenMetrics exporter: render, merge, validate, serve, snapshot.
+
+The exposition contract is what an external Prometheus would hold us to:
+counter samples carry ``_total``, histograms are cumulative with a
+``+Inf`` bucket and per-bucket exemplars, families are typed exactly
+once, and the text ends with ``# EOF``.  :func:`parse_openmetrics` is the
+strict in-repo validator (no prometheus_client dependency), so these
+tests also pin *it* against hand-built malformed inputs.
+"""
+import math
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.obs.export import (
+    CONTENT_TYPE,
+    FileExporter,
+    parse_openmetrics,
+    render_openmetrics,
+    serve,
+    write_prom,
+)
+from repro.obs.metrics import MetricRegistry
+
+
+def _populated_registry():
+    reg = MetricRegistry(name="t-export")
+    reg.counter("serving.requests", matrix="A").inc(7)
+    reg.counter("serving.requests", matrix="B").inc(2)
+    reg.gauge("slo.burn_rate", matrix="A", slo="deadline", window="60s").set(3.5)
+    h = reg.histogram("serving.latency_s", buckets=[1e-3, 1e-2, 1e-1], matrix="A")
+    h.observe(5e-3, exemplar="r9-1")
+    h.observe(5e-2)
+    h.observe(2.0, exemplar="r9-2")
+    reg.series("solver.residual").extend([4.0, 1.0, 0.25])
+    return reg
+
+
+# --- rendering --------------------------------------------------------------
+
+
+def test_render_round_trips_through_the_validator():
+    text = render_openmetrics([_populated_registry()])
+    assert text.endswith("# EOF\n")
+    fam = parse_openmetrics(text)
+    assert fam["serving_requests"]["type"] == "counter"
+    by_matrix = {
+        s["labels"]["matrix"]: s["value"]
+        for s in fam["serving_requests"]["samples"]
+    }
+    assert by_matrix == {"A": 7, "B": 2}
+    assert all(
+        s["name"] == "serving_requests_total"
+        for s in fam["serving_requests"]["samples"]
+    )
+    # the gauge keeps its full label set
+    (g,) = fam["slo_burn_rate"]["samples"]
+    assert g["value"] == 3.5 and g["labels"]["window"] == "60s"
+    # series export their last value as a _last gauge
+    (s,) = fam["solver_residual_last"]["samples"]
+    assert s["value"] == 0.25
+
+
+def test_render_histogram_cumulative_buckets_and_exemplars():
+    text = render_openmetrics([_populated_registry()])
+    fam = parse_openmetrics(text)
+    hist = fam["serving_latency_s"]
+    assert hist["type"] == "histogram"
+    buckets = [s for s in hist["samples"] if s["name"].endswith("_bucket")]
+    les = [float("inf") if s["labels"]["le"] == "+Inf" else float(s["labels"]["le"])
+           for s in buckets]
+    counts = [s["value"] for s in buckets]
+    assert les == sorted(les) and math.isinf(les[-1])
+    assert counts == sorted(counts) and counts[-1] == 3  # cumulative
+    # exemplars sit on the buckets their observation landed in
+    ex = {s["labels"]["le"]: s["exemplar"] for s in buckets if s["exemplar"]}
+    assert ex["0.01"]["labels"]["trace_id"] == "r9-1"
+    assert ex["0.01"]["value"] == 5e-3
+    assert ex["+Inf"]["labels"]["trace_id"] == "r9-2"
+    count = next(s for s in hist["samples"] if s["name"].endswith("_count"))
+    total = next(s for s in hist["samples"] if s["name"].endswith("_sum"))
+    assert count["value"] == 3
+    assert total["value"] == pytest.approx(5e-3 + 5e-2 + 2.0)
+
+
+def test_render_is_deterministic_and_sanitizes_names():
+    reg = MetricRegistry(name="t-names")
+    reg.counter("a.b-c/d", k="v").inc()
+    text = render_openmetrics([reg])
+    assert "a_b_c_d_total" in text
+    assert render_openmetrics([reg]) == text  # byte-identical re-render
+    # label values escape quotes/backslashes/newlines
+    reg.gauge("g", path='ha"s\\new\nline').set(1)
+    fam = parse_openmetrics(render_openmetrics([reg]))
+    (s,) = fam["g"]["samples"]
+    assert s["labels"]["path"] == 'ha"s\\new\nline'
+
+
+def test_cross_registry_merge_semantics():
+    a, b = MetricRegistry(name="m-a"), MetricRegistry(name="m-b")
+    a.counter("req", matrix="A").inc(3)
+    b.counter("req", matrix="A").inc(4)  # same series: counters sum
+    a.gauge("depth").set(1.0)
+    b.gauge("depth").set(9.0)  # gauges: last write (registry order) wins
+    ha = a.histogram("lat", buckets=[0.1, 1.0])
+    hb = b.histogram("lat", buckets=[0.1, 1.0])
+    ha.observe(0.05, exemplar="r-a")
+    hb.observe(0.5)
+    hb.observe(0.05, exemplar="r-b")  # same bucket: later registry wins
+    fam = parse_openmetrics(render_openmetrics([a, b]))
+    (c,) = fam["req"]["samples"]
+    assert c["value"] == 7
+    (g,) = fam["depth"]["samples"]
+    assert g["value"] == 9.0
+    buckets = [s for s in fam["lat"]["samples"] if s["name"] == "lat_bucket"]
+    assert buckets[-1]["value"] == 3  # counts merged
+    ex = next(s["exemplar"] for s in buckets if s["exemplar"])
+    assert ex["labels"]["trace_id"] == "r-b"
+
+
+def test_merge_conflicts_are_dropped_and_counted():
+    a, b = MetricRegistry(name="c-a"), MetricRegistry(name="c-b")
+    a.histogram("lat", buckets=[0.1]).observe(0.05)
+    b.histogram("lat", buckets=[0.2]).observe(0.05)  # bounds mismatch
+    fam = parse_openmetrics(render_openmetrics([a, b]))
+    (d,) = fam["repro_export_dropped"]["samples"]
+    assert d["value"] == 1
+    # the first registry's histogram survives intact
+    count = next(s for s in fam["lat"]["samples"] if s["name"] == "lat_count")
+    assert count["value"] == 1
+
+
+def test_empty_registries_render_just_eof():
+    assert render_openmetrics([]) == "# EOF\n"
+    assert parse_openmetrics("# EOF\n") == {}
+
+
+# --- the validator itself ---------------------------------------------------
+
+
+def test_parser_rejects_structural_violations():
+    with pytest.raises(ValueError, match="EOF"):
+        parse_openmetrics("# TYPE a counter\na_total 1\n")
+    with pytest.raises(ValueError, match="outside any TYPE"):
+        parse_openmetrics("orphan 1\n# EOF")
+    with pytest.raises(ValueError, match="does not belong"):
+        parse_openmetrics("# TYPE a counter\na 1\n# EOF")  # missing _total
+    with pytest.raises(ValueError, match="duplicate family"):
+        parse_openmetrics("# TYPE a gauge\n# TYPE a gauge\n# EOF")
+    with pytest.raises(ValueError, match="not cumulative"):
+        parse_openmetrics(
+            "# TYPE h histogram\n"
+            'h_bucket{le="1"} 5\nh_bucket{le="+Inf"} 3\n'
+            "h_count 5\nh_sum 1\n# EOF"
+        )
+    with pytest.raises(ValueError, match="missing le"):
+        parse_openmetrics(
+            "# TYPE h histogram\n"
+            'h_bucket{le="1"} 5\nh_count 5\nh_sum 1\n# EOF'
+        )
+
+
+# --- egress: HTTP endpoint + file snapshots ---------------------------------
+
+
+def test_http_endpoint_serves_live_openmetrics():
+    reg = _populated_registry()
+    with serve(port=0, registries=[reg]) as srv:
+        assert srv.url.endswith("/metrics")
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            assert resp.headers["Content-Type"] == CONTENT_TYPE
+            fam = parse_openmetrics(resp.read().decode("utf-8"))
+        assert fam["serving_requests"]["type"] == "counter"
+        # live: a scrape after more traffic sees the new value
+        reg.counter("serving.requests", matrix="A").inc(10)
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            fam2 = parse_openmetrics(resp.read().decode("utf-8"))
+        by_matrix = {
+            s["labels"]["matrix"]: s["value"]
+            for s in fam2["serving_requests"]["samples"]
+        }
+        assert by_matrix["A"] == 17
+        # anything but / or /metrics is a 404
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(srv.url.replace("/metrics", "/nope"), timeout=10)
+    # closed: the port no longer accepts scrapes
+    with pytest.raises(urllib.error.URLError):
+        urllib.request.urlopen(srv.url, timeout=0.5)
+
+
+def test_write_prom_and_file_exporter(tmp_path):
+    reg = _populated_registry()
+    path = tmp_path / "metrics.prom"
+    text = write_prom(path, [reg])
+    assert path.read_text() == text
+    assert parse_openmetrics(text)["serving_requests"]["type"] == "counter"
+    assert not list(tmp_path.glob("*.tmp.*"))  # atomic: no droppings
+
+    with FileExporter(tmp_path / "snap.prom", interval_s=60.0, registries=[reg]) as fx:
+        # the first snapshot is written synchronously on start
+        assert parse_openmetrics((tmp_path / "snap.prom").read_text())
+        reg.counter("serving.requests", matrix="A").inc()
+    # stop() wrote a final snapshot with the newer value
+    assert fx.writes >= 2
+    fam = parse_openmetrics((tmp_path / "snap.prom").read_text())
+    by_matrix = {
+        s["labels"]["matrix"]: s["value"]
+        for s in fam["serving_requests"]["samples"]
+    }
+    assert by_matrix["A"] == 8
+    fx.stop()  # idempotent

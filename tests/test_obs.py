@@ -346,7 +346,8 @@ def test_dump_report_and_ledger(obs_on, tmp_path):
     obs.write_events(tmp_path / "events.jsonl")
     lines = (tmp_path / "events.jsonl").read_text().splitlines()
     assert len(lines) == len(trace["traceEvents"])
-    assert all(json.loads(ln)["ph"] == "X" for ln in lines)
+    # complete spans plus request flow events (submit "s" → flush "f")
+    assert all(json.loads(ln)["ph"] in ("X", "s", "f") for ln in lines)
 
 
 def test_render_handles_empty_snapshot():
@@ -767,3 +768,254 @@ def test_engine_attribution_counters_flow_to_report(tmp_path):
     assert row["launches"] >= 1
     assert row["bytes_modeled"] > 0 and row["measured_s"] > 0
     assert "bandwidth attribution" in render(snap)
+
+
+# --- request-scoped tracing: contexts, exemplars, flows, waterfall ----------
+
+
+def test_histogram_keeps_most_recent_exemplar_per_bucket():
+    h = Histogram("lat", {}, buckets=[0.001, 0.01, 0.1])
+    h.observe(0.005, exemplar="r1-a")
+    h.observe(0.007, exemplar="r1-b")  # same bucket: replaces r1-a
+    h.observe(0.5, exemplar="r1-c")  # overflow slot
+    h.observe(0.05)  # no exemplar: bucket stays empty
+    ex = h.exemplars()
+    assert [(e["trace_id"], e["value"]) for e in ex] == [
+        ("r1-b", 0.007),
+        ("r1-c", 0.5),
+    ]
+    assert ex[0]["le"] == 0.01 and ex[1]["le"] == float("inf")
+    # exemplars ride the snapshot (and therefore obs.dump())
+    assert h.snapshot()["exemplars"] == ex
+    # a histogram that never saw an exemplar allocates nothing and omits
+    h2 = Histogram("lat2", {}, buckets=[0.001])
+    h2.observe(0.5)
+    assert h2.exemplars() == [] and "exemplars" not in h2.snapshot()
+
+
+def test_noop_observe_accepts_exemplar_kwarg():
+    assert not obs.enabled()
+    # the disabled path must accept the full enabled-path signature
+    obs.histogram("t").observe(0.5, exemplar="r-1")
+    obs.flow("request", "r-1", "s")  # gated: no tracer event while disabled
+    assert obs.tracer().snapshot() == []
+
+
+def test_tracer_flow_events_shape_and_validation():
+    tr = Tracer()
+    tr.flow("request", "r3-1", "s", matrix="A")
+    tr.flow("request", "r3-1", "f")
+    s_ev, f_ev = tr.snapshot()
+    assert s_ev["ph"] == "s" and f_ev["ph"] == "f"
+    assert s_ev["id"] == f_ev["id"] == "r3-1"
+    assert s_ev["cat"] == f_ev["cat"] == "request"
+    assert f_ev["bp"] == "e"  # finish binds to the enclosing slice
+    assert "bp" not in s_ev
+    assert s_ev["args"] == {"matrix": "A"}
+    with pytest.raises(ValueError, match="flow phase"):
+        tr.flow("request", "r3-1", "x")
+    # flow events carry no duration, so the span summary skips them
+    assert tr.summary() == []
+
+
+def test_engine_emits_flow_events_when_enabled(obs_on, tmp_path):
+    reg, A, eng, vclock = _serve_matrix(tmp_path, max_wait_s=1e9, max_batch=4)
+    rng = np.random.default_rng(0)
+    tickets = [
+        eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+        for _ in range(3)
+    ]
+    eng.flush()
+    events = obs.tracer().snapshot()
+    starts = {e["id"] for e in events if e["ph"] == "s"}
+    finishes = {e["id"] for e in events if e["ph"] == "f"}
+    ids = {t.trace_id for t in tickets}
+    assert starts == finishes == ids
+    # finish events land inside the serve.flush slice (bp="e" binding)
+    flush = next(e for e in events if e["ph"] == "X" and e["name"] == "serve.flush")
+    for e in events:
+        if e["ph"] == "f":
+            assert flush["ts"] <= e["ts"] <= flush["ts"] + flush["dur"]
+
+
+def test_request_context_decomposition_on_virtual_clock(tmp_path):
+    from repro.obs.requesttrace import RequestLog
+
+    log = RequestLog()
+    reg, A, eng, vclock = _serve_matrix(
+        tmp_path, max_wait_s=0.5, max_batch=4, request_log=log
+    )
+    rng = np.random.default_rng(0)
+    tickets = []
+    for i in range(4):
+        vclock[0] = 0.01 * i  # submits at t=0.00, 0.01, 0.02, 0.03
+        tickets.append(
+            eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+        )
+    vclock[0] = 0.1
+    eng.flush()
+    assert log.count == 4
+    ctxs = {c.trace_id: c for c in log.contexts()}
+    assert set(ctxs) == {t.trace_id for t in tickets}
+    for i, t in enumerate(tickets):
+        c = ctxs[t.trace_id]
+        assert c is t.context and c.done
+        # stamps are in the virtual-clock domain: fully deterministic
+        assert c.t_submit == pytest.approx(0.01 * i)
+        assert c.queue_wait_s == pytest.approx(0.1 - 0.01 * i)
+        assert c.latency_s == pytest.approx(0.1 - 0.01 * i)
+        assert c.t_flush_start == c.t_dispatch == c.t_complete == 0.1
+        assert c.batch_share == pytest.approx(0.25)
+        assert c.batch_k == 4 and c.flush_reason == "drain"
+        assert c.deadline_hit is (c.latency_s <= 0.5)
+        # compute is wall time, attributed by share
+        assert c.compute_s > 0
+        assert c.compute_share_s == pytest.approx(c.compute_s * 0.25)
+        d = c.to_dict()
+        assert d["trace_id"] == c.trace_id and d["matrix"] == "A"
+        assert d["queue_wait_s"] == pytest.approx(c.queue_wait_s)
+    # the per-batch exemplar ends up on the latency histogram
+    h = eng.metrics.get("serving.latency_s", matrix="A")
+    assert {e["trace_id"] for e in h.exemplars()} <= set(ctxs)
+    # and the engine defaulting to the process log feeds obs.collect()
+    assert all(r["matrix"] == "A" for r in log.snapshot())
+
+
+def test_collect_includes_process_request_log(tmp_path):
+    obs.reset()
+    reg, A, eng, vclock = _serve_matrix(tmp_path, max_wait_s=1e9, max_batch=2)
+    rng = np.random.default_rng(0)
+    t = eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+    eng.flush()
+    snap = obs.collect()
+    assert any(r["trace_id"] == t.trace_id for r in snap["requests"])
+    obs.reset()  # reset() clears the request log too
+    assert obs.collect()["requests"] == []
+
+
+def test_deadline_miss_dump_names_late_requests(tmp_path):
+    """Acceptance criterion: the deadline_miss trigger event carries the
+    trace ids of the late requests, and the dump filename is greppable by
+    the first of them."""
+    from repro.obs.requesttrace import RequestLog
+
+    fl = FlightRecorder(capacity=256, dump_dir=tmp_path / "dumps")
+    log = RequestLog()
+    reg, A, eng, vclock = _serve_matrix(
+        tmp_path, max_wait_s=0.001, max_batch=8, flight=fl, request_log=log
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+    vclock[0] = 1.0  # every pending request misses
+    eng.flush()
+    late = [c.trace_id for c in log.contexts() if c.deadline_hit is False]
+    assert len(late) == 4
+    (dump_path,) = fl.stats()["dumps"]
+    loaded = json.load(open(dump_path))
+    assert loaded["otherData"]["context"]["trace_ids"] == late
+    (trig,) = [e for e in loaded["traceEvents"] if e["name"] == "flight.trigger"]
+    assert trig["args"]["trace_ids"] == late
+    # the filename names the first late request
+    assert late[0] in dump_path
+    # the flush ring event lists every coalesced request
+    flush = next(e for e in loaded["traceEvents"] if e["name"] == "serve.flush")
+    assert flush["args"]["trace_ids"] == late
+
+
+def test_flight_reset_clears_rate_limiter_and_dump_seq(tmp_path):
+    """Satellite: reset() must clear the per-reason rate limiter and the
+    dump sequence counter, or post-reset triggers are silently suppressed
+    and filenames collide across test runs."""
+    fl = FlightRecorder(capacity=8, dump_dir=tmp_path, min_dump_interval_s=60.0)
+    first = fl.trigger("deadline_miss", matrix="A")
+    assert first is not None and "_0" in first
+    assert fl.trigger("deadline_miss") is None  # rate-limited
+    assert fl.stats()["suppressed_triggers"] == 1
+    fl.reset()
+    # post-reset: not suppressed, and the sequence restarts at 0
+    again = fl.trigger("deadline_miss", matrix="A")
+    assert again is not None
+    assert json.load(open(again))["otherData"]["seq"] == 0
+    st = fl.stats()
+    assert st["suppressed_triggers"] == 0 and st["dumps"] == [str(again)]
+
+
+def test_waterfall_renders_decomposition_and_handles_gaps():
+    from repro.obs.requesttrace import waterfall
+
+    rows = [
+        {
+            "trace_id": "r1-0", "matrix": "A", "latency_s": 0.10,
+            "queue_wait_s": 0.08, "compute_share_s": 0.02,
+            "batch_share": 0.25, "flush_reason": "size",
+        },
+        {
+            "trace_id": "r1-1", "matrix": "B", "latency_s": 0.05,
+            "queue_wait_s": None, "compute_share_s": None,
+            "batch_share": None, "flush_reason": None,
+        },
+        {"trace_id": "r1-2", "matrix": "C", "latency_s": None},  # incomplete
+    ]
+    out = waterfall(rows, n=10, width=10)
+    lines = out.splitlines()
+    assert "slowest 2 requests" in lines[0]  # incomplete row dropped
+    assert lines[2].startswith("r1-0")  # sorted by latency desc
+    assert "░░░░░░░░██" in lines[2]  # 8/10 queue cells, 2/10 compute
+    assert "1/4" in lines[2] and "size" in lines[2]
+    # None fields render as n/a, never crash and never print "None"
+    assert "n/a" in lines[3] and "None" not in out
+    # n bounds the table; dict input reads snapshot["requests"]
+    assert "slowest 1 requests" in waterfall({"requests": rows}, n=1)
+    assert "no completed requests" in waterfall([])
+
+
+def test_report_renders_requests_section_and_na(tmp_path):
+    obs.reset()
+    reg, A, eng, vclock = _serve_matrix(tmp_path, max_wait_s=1e9, max_batch=2)
+    rng = np.random.default_rng(0)
+    eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+    eng.flush()
+    # an empty histogram's percentiles must render as n/a, not None
+    eng.metrics.histogram("serving.empty_hist", matrix="A")
+    text = render(obs.collect())
+    assert "slowest 1 requests" in text
+    assert "n/a" in text and "None" not in text
+    obs.reset()
+
+
+def test_analysis_report_cli_round_trips_dump(tmp_path, capsys, monkeypatch):
+    """Satellite: --obs / --attribution / --requests must all re-render a
+    real repro.obs.dump() snapshot file."""
+    from repro.analysis import report as analysis_report
+
+    obs.reset()
+    reg, A, eng, vclock = _serve_matrix(tmp_path, max_wait_s=1e9, max_batch=4)
+    rng = np.random.default_rng(0)
+    tickets = [
+        eng.submit("A", rng.standard_normal(A.shape[1]).astype(np.float32))
+        for _ in range(3)
+    ]
+    eng.flush()
+    snap_path = tmp_path / "obs.json"
+    obs.dump(snap_path)
+
+    monkeypatch.setattr("sys.argv", ["report", "--obs", str(snap_path)])
+    analysis_report.main()
+    out = capsys.readouterr().out
+    assert "repro.obs report" in out
+    assert "serving.requests{matrix=A}" in out
+    assert "slowest 3 requests" in out  # dump carries the request log
+
+    monkeypatch.setattr("sys.argv", ["report", "--attribution", str(snap_path)])
+    analysis_report.main()
+    assert "bandwidth attribution" in capsys.readouterr().out
+
+    monkeypatch.setattr(
+        "sys.argv", ["report", "--requests", str(snap_path), "--top", "2"]
+    )
+    analysis_report.main()
+    out = capsys.readouterr().out
+    assert "slowest 2 requests" in out  # --top bounds the table
+    assert any(t.trace_id in out for t in tickets)
+    obs.reset()
