@@ -24,6 +24,11 @@ it to that with three measurements:
 * ``obs/openmetrics_render`` — one full OpenMetrics exposition render of
   a populated registry: the per-scrape cost a Prometheus endpoint pays
   (off the serving hot path, but a runaway here would starve a scraper).
+* ``obs/plan_quality`` — per-admission cost of the partition-quality
+  introspection (:func:`repro.obs.planview.partition_quality`: occupancy
+  stats, LPT competitive-ratio replay, hash-group cohesion vs a random
+  baseline).  Unlike the ratio-gated benches this one carries a pinned
+  absolute budget: exceeding it raises, failing the whole bench run.
 
 All timings restore the obs enable state they found, and the registries
 are reset afterwards so a ``--trace`` run's artifact is not polluted by
@@ -46,6 +51,11 @@ from repro.serving import MatrixRegistry, ServingEngine
 from .common import emit, load_suite, timeit
 
 _MICRO_OPS = 10_000
+
+# per-admission ceiling for the partition-quality introspection bench:
+# far above the measured cost (single-digit ms on the smoke suite) but low
+# enough that an accidental Python-loop rewrite of the metrics trips it
+_PLAN_QUALITY_BUDGET_MS = 250.0
 
 
 def _serve_cycle(engine: ServingEngine, key: str, xs, vclock) -> None:
@@ -198,6 +208,29 @@ def main(full: bool = False) -> None:
         config={"matrices": 4, "hist_samples": 256},
     )
     del render_reg
+
+    # admission-time introspection: partition_quality (occupancy stats +
+    # LPT competitive-ratio replay + hash-group cohesion vs the random
+    # baseline) runs once per admit, so its cost IS the explain feature's
+    # overhead.  Pinned to a generous absolute budget: blowing it means
+    # the introspection stopped being vectorised, and admission latency
+    # regressed for every caller — fail the bench run outright.
+    from repro.obs.planview import partition_quality
+
+    plan = keep[0].get(name)
+    t = timeit(lambda: partition_quality(plan.tiles, csr), repeats=repeats)
+    emit(
+        f"obs/plan_quality/{name}",
+        t,
+        f"ms_per_admission={1e3 * float(t):.2f} tiles={plan.tiles.n_tiles}",
+        config={"tiles": plan.tiles.n_tiles, "budget_ms": _PLAN_QUALITY_BUDGET_MS},
+    )
+    if t.stats["median_us"] > _PLAN_QUALITY_BUDGET_MS * 1e3:
+        raise RuntimeError(
+            f"partition_quality took {t.stats['median_us'] / 1e3:.1f}ms per "
+            f"admission on {name} — over the {_PLAN_QUALITY_BUDGET_MS:.0f}ms "
+            "budget; the admission-introspection path must stay vectorised"
+        )
 
     # snapshot before the registries in `keep` go out of scope (their
     # MetricRegistry instances are weakly aggregated into the dump)

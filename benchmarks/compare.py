@@ -75,6 +75,13 @@ def main(argv=None) -> int:
         help="rewrite the baseline from the current run instead of gating "
         "(gated prefixes only; baseline-only records are kept)",
     )
+    ap.add_argument(
+        "--diff-out",
+        default=None,
+        metavar="PATH",
+        help="on gate failure, write a markdown culprit report (ranked "
+        "per-record deltas + per-phase rollup) naming the regressed phase",
+    )
     args = ap.parse_args(argv)
 
     cur = load_records(args.current)
@@ -157,9 +164,38 @@ def main(argv=None) -> int:
         )
         for line in regressions:
             print(f"FAIL {line}", file=sys.stderr)
+        if args.diff_out:
+            _write_diff_report(args.diff_out, base, cur, gated)
         return 1
     print(f"\ngate clean (threshold +{args.threshold:.0%})")
     return 0
+
+
+def _write_diff_report(path: str, base: dict, cur: dict, gated) -> None:
+    """Leave the ranked culprit report next to the failed gate (CI uploads
+    it alongside BENCH_ci.json so the failure names the regressed phase
+    without a local repro)."""
+    import os
+
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    )
+    from repro.analysis.diff import _phase_table, _rank, diff_bench_records, render_markdown
+
+    rows = _rank(
+        [r for r in diff_bench_records(base, cur) if gated(r["name"])]
+    )
+    culprit = next((r for r in rows if (r["excess"] or 0) > 0 and r["a"]), None)
+    result = {
+        "kind": "bench",
+        "unit": "us",
+        "rows": rows,
+        "phases": _phase_table(rows),
+        "culprit": culprit,
+    }
+    with open(path, "w") as f:
+        f.write(render_markdown(result, title="Bench gate failure: baseline vs current"))
+    print(f"culprit report written to {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

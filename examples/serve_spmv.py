@@ -95,6 +95,13 @@ def main() -> None:
             "open at https://ui.perfetto.dev) and serve_obs.json"
         )
         print(obs.report())
+        # the per-matrix explain report: partition quality, autotune
+        # provenance, modeled-vs-measured bandwidth, imbalance verdict —
+        # the same text `python -m repro.analysis.report --explain circuit`
+        # re-renders from serve_obs.json
+        from repro.obs.planview import explain_report
+
+        print(explain_report(snap, "circuit"))
     print("ok")
 
 

@@ -22,6 +22,20 @@ decomposition, trace ids included so rows join to flight dumps and
 histogram exemplars (``--top`` bounds N)::
 
     PYTHONPATH=src python -m repro.analysis.report --requests obs.json --top 10
+
+``--explain MATRIX`` renders the per-matrix explain report — partition
+quality (tile occupancy, competitive ratio, hash-group cohesion),
+autotune decision provenance, modeled-vs-measured bandwidth and the
+imbalance verdict — from the ``--obs`` snapshot (default
+``serve_obs.json``, the artifact ``examples/serve_spmv.py`` leaves)::
+
+    PYTHONPATH=src python -m repro.analysis.report --explain circuit --obs serve_obs.json
+
+``--diff A B`` compares two obs dumps (or two ``benchmarks.run --json``
+artifacts) and prints the ranked culprit table
+(:mod:`repro.analysis.diff`)::
+
+    PYTHONPATH=src python -m repro.analysis.report --diff before.json after.json
 """
 from __future__ import annotations
 
@@ -148,7 +162,38 @@ def main() -> None:
         default=20,
         help="how many requests the --requests waterfall shows (default 20)",
     )
+    ap.add_argument(
+        "--explain",
+        default=None,
+        metavar="MATRIX",
+        help="render the per-matrix explain report (partition quality, "
+        "autotune provenance, modeled-vs-measured bandwidth, imbalance "
+        "verdict) from the --obs snapshot (default serve_obs.json)",
+    )
+    ap.add_argument(
+        "--diff",
+        nargs=2,
+        default=None,
+        metavar=("A", "B"),
+        help="differential comparison of two obs dumps or two "
+        "benchmarks.run --json artifacts (ranked culprit table)",
+    )
     args = ap.parse_args()
+    if args.diff:
+        from repro.analysis.diff import diff_artifacts, load_artifact, render_text
+
+        a, b = args.diff
+        print(
+            render_text(diff_artifacts(load_artifact(a), load_artifact(b)), top=args.top),
+            end="",
+        )
+        return
+    if args.explain:
+        from repro.obs.planview import explain_report
+
+        snapshot = json.loads(Path(args.obs or "serve_obs.json").read_text())
+        print(explain_report(snapshot, args.explain), end="")
+        return
     if args.requests:
         from repro.obs.requesttrace import waterfall
 

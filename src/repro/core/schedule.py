@@ -55,6 +55,19 @@ class Schedule:
         mean = self.loads.mean()
         return float(self.loads.max() / mean) if mean > 0 else 1.0
 
+    @property
+    def competitive_ratio(self) -> float:
+        """Modeled makespan over the ideal balanced makespan.
+
+        ``ideal = total / n_workers`` (every worker slot counted, loaded or
+        not), so this equals :attr:`makespan_ratio` but carries the paper's
+        framing: how far the competitive allocation lands from a perfectly
+        balanced split.  1.0 is ideal; a value pinned well above 1 means a
+        single block dominates and NO schedule can balance the work — the
+        partition itself is the bottleneck, not the placement.
+        """
+        return self.makespan_ratio
+
     def padded(self, null_block: int = -1) -> np.ndarray:
         """Dense [workers, max_len] block-id matrix padded with null blocks."""
         n = max((len(a) for a in self.assignment), default=0)

@@ -73,6 +73,53 @@ class HBPTiles:
         total = self.data.size
         return float(np.count_nonzero(self.data) / total) if total else 1.0
 
+    # --- per-tile cost vectors (the plan-introspection inputs) -------------
+
+    def tile_nnz(self) -> np.ndarray:
+        """Stored entries per tile, ``i64[T]`` — each tile's useful payload.
+
+        The kernel streams every tile at full ``group × lane`` width
+        regardless, so ``tile_nnz / (group * lane)`` is the per-tile
+        occupancy: the exact fraction of that tile's HBM traffic that was
+        not padding.
+        """
+        if self.n_tiles == 0:
+            return np.zeros(0, dtype=np.int64)
+        return np.count_nonzero(
+            self.data.reshape(self.n_tiles, -1), axis=1
+        ).astype(np.int64)
+
+    def tile_occupancy(self) -> np.ndarray:
+        """Per-tile useful fraction of slots, ``f64[T]`` in (0, 1]."""
+        slots = self.cfg.group * self.cfg.lane
+        return self.tile_nnz() / float(slots)
+
+    def rowgroup_costs(self) -> np.ndarray:
+        """Tiles per output row group, ``i64[n_rowgroups]``.
+
+        On the sequentially-executed TPU grid a row group's service time is
+        proportional to the tiles it owns — this is the cost vector the
+        imbalance gauges and the LPT competitive-ratio model consume.
+        """
+        return np.bincount(self.rowgroup, minlength=self.n_rowgroups).astype(
+            np.int64
+        )
+
+    def block_costs(self) -> np.ndarray:
+        """Tiles per (row-block, col-block) grid cell, flattened row-major.
+
+        The schedule layer's unit of placement (paper §III-C): feeding this
+        to :func:`repro.core.schedule.lpt_schedule` replays the competitive
+        allocation and yields the modeled-vs-ideal makespan ratio.
+        """
+        gpb = self.cfg.row_block // self.cfg.group
+        nbr = -(-self.n_rowgroups // gpb)
+        nbc = -(-self.shape[1] // self.cfg.col_block)
+        if self.n_tiles == 0:
+            return np.zeros(nbr * nbc, dtype=np.int64)
+        block_id = (self.rowgroup.astype(np.int64) // gpb) * nbc + self.colblock
+        return np.bincount(block_id, minlength=nbr * nbc).astype(np.int64)
+
 
 def build_tiles(
     csr: CSRMatrix,

@@ -38,7 +38,12 @@ from collections import deque
 from pathlib import Path
 from typing import Dict, List, Optional
 
-__all__ = ["FlightRecorder", "get_flight"]
+__all__ = ["FlightRecorder", "get_flight", "DEFAULT_DUMP_DIR"]
+
+# where trigger dumps land when neither the recorder's ``dump_dir`` nor
+# ``$REPRO_FLIGHT_DIR`` is set — a dedicated (gitignored) subdirectory, so
+# the default can never pollute a repository checkout's root
+DEFAULT_DUMP_DIR = ".flight_dumps"
 
 
 def _safe_token(s: str, maxlen: int = 40) -> str:
@@ -125,7 +130,10 @@ class FlightRecorder:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
-        self.dump_dir = dump_dir  # None: $REPRO_FLIGHT_DIR at dump time, else cwd
+        # None: $REPRO_FLIGHT_DIR at dump time, else ./.flight_dumps/ — never
+        # the bare cwd, so an example run can't litter a repo checkout with
+        # flight_*.json artifacts (they are post-mortems, not source)
+        self.dump_dir = dump_dir
         self.max_dumps = max_dumps
         self.min_dump_interval_s = min_dump_interval_s
         self.latency_window = latency_window
@@ -257,7 +265,7 @@ class FlightRecorder:
         directory = Path(
             self.dump_dir
             if self.dump_dir is not None
-            else os.environ.get("REPRO_FLIGHT_DIR", ".")
+            else os.environ.get("REPRO_FLIGHT_DIR", DEFAULT_DUMP_DIR)
         )
         directory.mkdir(parents=True, exist_ok=True)
         stem = f"flight_{reason}_{seq}"

@@ -38,6 +38,7 @@ __all__ = [
     "Probe",
     "spmm_probe",
     "cg_probe",
+    "measure_k_tilings",
     "pick_k_tiling",
     "autotune_partition",
     "DEFAULT_CACHE_DIR",
@@ -71,6 +72,11 @@ class AutotuneResult:
     searched: bool  # a measured search ran this call
     evaluations: int  # candidate geometries actually timed
     objective_us: Optional[float]  # best measured SpMM time (None: heuristic)
+    # decision provenance: every candidate measured, as
+    # ``{"config": {...}, "objective_us": float}`` dicts sorted fastest
+    # first — persisted into the cache entry, so a cache-hit admission can
+    # still explain WHY its geometry won the original search
+    trials: tuple = ()
 
 
 class AutotuneCache:
@@ -262,6 +268,35 @@ def _measure_spmm_us(
     return float(np.median(ts) * 1e6)
 
 
+def measure_k_tilings(
+    csr: CSRMatrix,
+    cfg: PartitionConfig,
+    *,
+    k: int = 256,
+    strategy: str = "stable",
+    repeats: int = 3,
+) -> Optional[dict]:
+    """Measured microseconds per launch-geometry contract, or ``None``.
+
+    Returns ``{"grid": us, "loop": us}`` at a RHS width where the two
+    contracts genuinely differ.  At ``k <= LANE_TILE`` the contracts are
+    the same launch, and under ``strategy="stable"`` they are the same
+    chunked computation at EVERY width (bitwise invariance is that path's
+    contract) — measuring would just rank noise, so both cases return
+    ``None`` and the caller keeps the default.  The non-None dict is the
+    provenance :func:`pick_k_tiling` decides from, recorded per plan so
+    ``explain()`` can show why a geometry was served.
+    """
+    from repro.kernels import ops
+
+    if k <= ops.LANE_TILE or strategy == "stable":
+        return None  # the contracts are the same computation here
+    return {
+        kt: _measure_spmm_us(csr, cfg, k, repeats, strategy, k_tiling=kt)
+        for kt in ops.K_TILINGS
+    }
+
+
 def pick_k_tiling(
     csr: CSRMatrix,
     cfg: PartitionConfig,
@@ -275,20 +310,12 @@ def pick_k_tiling(
 
     Returns ``"grid"`` or ``"loop"``, whichever served the faster launch
     under this matrix's geometry (the registry's ``k_tiling="auto"`` calls
-    this at admission).  At k <= LANE_TILE the contracts coincide, so the
-    probe width defaults to two lane tiles; under ``strategy="stable"``
-    they are the same chunked computation at EVERY width (bitwise
-    invariance is that path's contract), so measuring would just pick by
-    noise — short-circuit to the default.
+    this at admission); ``"grid"`` when :func:`measure_k_tilings`
+    short-circuits because the contracts coincide.
     """
-    from repro.kernels import ops
-
-    if k <= ops.LANE_TILE or strategy == "stable":
-        return "grid"  # the contracts are the same computation here
-    times = {
-        kt: _measure_spmm_us(csr, cfg, k, repeats, strategy, k_tiling=kt)
-        for kt in ops.K_TILINGS
-    }
+    times = measure_k_tilings(csr, cfg, k=k, strategy=strategy, repeats=repeats)
+    if times is None:
+        return "grid"
     return min(times, key=times.get)
 
 
@@ -353,6 +380,7 @@ def autotune_partition(
             return AutotuneResult(
                 cfg=cached, cache_hit=True, searched=False, evaluations=0,
                 objective_us=entry.get("objective_us"),
+                trials=tuple(entry.get("trials") or ()),
             )
 
     if not search:
@@ -363,6 +391,7 @@ def autotune_partition(
         )
 
     best_cfg, best_us = None, float("inf")
+    trials = []
     with obs.span(
         "serve.autotune", probe=probe.kind, candidates=len(candidates)
     ) as search_sp:
@@ -375,9 +404,13 @@ def autotune_partition(
             ) as sp:
                 us = probe(csr, cand, repeats)
                 sp.annotate(objective_us=round(us, 1))
+            trials.append(
+                {"config": dataclasses.asdict(cand), "objective_us": round(us, 1)}
+            )
             if us < best_us:
                 best_cfg, best_us = cand, us
         search_sp.annotate(best_us=round(best_us, 1))
+    trials.sort(key=lambda t: (t["objective_us"], sorted(t["config"].items())))
     if best_cfg is not None:
         # searches are rare + expensive: a flight-ring record of the winner
         # makes a later post-mortem show which geometry this plan serves
@@ -393,7 +426,7 @@ def autotune_partition(
         return autotune_partition(csr, key=key, cache=cache, search=False)
     cache.put(
         key, best_cfg, searched=True, objective_us=best_us, space=space,
-        probe=probe.kind,
+        probe=probe.kind, trials=trials,
     )
     return AutotuneResult(
         cfg=best_cfg,
@@ -401,4 +434,5 @@ def autotune_partition(
         searched=True,
         evaluations=len(candidates),
         objective_us=best_us,
+        trials=tuple(trials),
     )

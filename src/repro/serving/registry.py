@@ -32,6 +32,7 @@ from repro.core.formats import CSRMatrix
 from repro.core.partition import PartitionConfig
 from repro.core.tile import HBPTiles, build_tiles
 from repro.obs.metrics import MetricRegistry
+from repro.obs import planview
 
 from .autotune import AutotuneCache, autotune_partition, matrix_hash
 
@@ -60,6 +61,16 @@ class MatrixPlan:
     # one-pass 2D k-tiled grid, "loop" = the legacy chunked launches
     # (an "auto" admission resolves to whichever measured faster)
     k_tiling: str = "grid"
+    # admission-time introspection: static partition-quality metrics
+    # (:func:`repro.obs.planview.partition_quality`) and the autotune
+    # decision provenance — which geometry candidates were measured, what
+    # each cost, and how the served k_tiling was chosen.  Deliberately NOT
+    # part of ``_meta()``: these describe the plan, the kernels never see
+    # them.
+    quality: dict = dataclasses.field(default_factory=dict, repr=False, compare=False)
+    provenance: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
     # A <-> A^T link, set by MatrixRegistry.admit_pair: the transpose
     # plan's name plus a direct reference (a symmetric matrix links to
     # itself — one residency serves both directions for free)
@@ -273,8 +284,10 @@ class MatrixRegistry:
             # the measured search ranks candidates under the served contract;
             # "auto" ranks under the default grid, then picks per matrix below
             served_tiling = self.k_tiling if self.k_tiling != "auto" else "grid"
-            if cfg is not None:
+            pinned = cfg is not None
+            if pinned:
                 tune_hit, tune_searched = False, False
+                trials, evaluations, objective_us = (), 0, None
             else:
                 tuned = autotune_partition(
                     csr,
@@ -289,10 +302,15 @@ class MatrixRegistry:
                 )
                 cfg = tuned.cfg
                 tune_hit, tune_searched = tuned.cache_hit, tuned.searched
+                trials = tuned.trials
+                evaluations, objective_us = tuned.evaluations, tuned.objective_us
+            k_tiling_us = None
             if self.k_tiling == "auto":
-                from .autotune import pick_k_tiling
+                from .autotune import measure_k_tilings
 
-                served_tiling = pick_k_tiling(csr, cfg, strategy=self.strategy)
+                k_tiling_us = measure_k_tilings(csr, cfg, strategy=self.strategy)
+                if k_tiling_us:
+                    served_tiling = min(k_tiling_us, key=k_tiling_us.get)
             tiles = build_tiles(csr, cfg)
             with obs.span("serve.stage_device", matrix=name):
                 device = ops.device_tiles(tiles)
@@ -301,6 +319,22 @@ class MatrixRegistry:
             preprocess_s = time.perf_counter() - t0
             name = name or f"m_{key[:12]}"
             sp.annotate(matrix=name, preprocess_s=round(preprocess_s, 6))
+            # partition-quality introspection runs once per admission,
+            # after the preprocess clock stops: it describes the plan, it
+            # is not part of the amortizable build cost
+            with obs.span("admit.plan_quality", matrix=name, tiles=tiles.n_tiles):
+                quality = planview.partition_quality(tiles, csr)
+        provenance = {
+            "searched": tune_searched,
+            "cache_hit": tune_hit,
+            "pinned": pinned,
+            "evaluations": evaluations,
+            "objective_us": objective_us,
+            "trials": [dict(t) for t in trials],
+            "k_tiling": served_tiling,
+            "k_tiling_mode": self.k_tiling,
+            "k_tiling_us": k_tiling_us,
+        }
 
         plan = MatrixPlan(
             name=name,
@@ -318,11 +352,14 @@ class MatrixRegistry:
             strategy=self.strategy,
             interpret=self.interpret,
             k_tiling=served_tiling,
+            quality=quality,
+            provenance=provenance,
             _metrics=self.metrics,
         )
         self._plans[name] = plan
         self._by_hash[key] = name
         m = self.metrics
+        planview.register_plan_metrics(m, name, quality, provenance)
         m.counter("registry.misses", matrix=name).inc()
         m.counter("registry.admissions", matrix=name).inc()
         m.counter("registry.preprocess_s", matrix=name).inc(preprocess_s)
@@ -431,6 +468,10 @@ class MatrixRegistry:
                 "preprocess_s": p.preprocess_s,
                 "autotune_cache_hit": p.autotune_cache_hit,
                 "autotune_searched": p.autotune_searched,
+                "quality": {
+                    k: v for k, v in p.quality.items() if k != "occupancy_sample"
+                },
+                "provenance": p.provenance,
             }
             for name, p in self._plans.items()
         }

@@ -1,0 +1,267 @@
+"""Partition-quality introspection: metrics, gauges, provenance, explain.
+
+The acceptance properties: a skewed matrix (one dense row block) must
+raise the rowgroup-imbalance gauge AND the LPT competitive ratio well
+above a uniform random matrix (which stays near 1.0); hash-group cohesion
+must be measurably higher for a banded matrix than for the same matrix
+with its rows shuffled; the ``plan.*`` gauges must appear in a live
+OpenMetrics scrape of the owning registry's metrics; and the explain
+report must round-trip through a real ``obs.collect()`` snapshot while
+staying n/a-safe and deterministic on empty/partial dumps.
+"""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.formats import COOMatrix, csr_from_coo
+from repro.core.matrices import banded_fem, uniform_random
+from repro.core.partition import PartitionConfig
+from repro.core.tile import build_tiles
+from repro.obs.export import parse_openmetrics, render_openmetrics
+from repro.obs.planview import (
+    explain_report,
+    partition_quality,
+    plan_metrics_from_snapshot,
+    register_plan_metrics,
+)
+from repro.serving import MatrixRegistry
+
+# small blocks keep several column blocks in play (cohesion needs a
+# footprint wider than one block) and the builds in the milliseconds
+CFG = PartitionConfig(row_block=256, col_block=256, group=8, lane=32)
+
+# acceptance thresholds: the skewed matrix must blow these, the uniform
+# one must stay under them
+SKEWED_RATIO_MIN = 1.5
+UNIFORM_RATIO_MAX = 1.2
+
+
+def _skewed(n: int = 1024):
+    """One fully dense 256x256 block + a sparse background diagonal: a
+    single partition block dominates, so no 2-worker schedule can balance
+    it (the other worker gets everything else and still idles)."""
+    d = 256
+    rows = np.repeat(np.arange(d), d)
+    cols = np.tile(np.arange(d), d)
+    diag = np.arange(d, n, 4)  # every 4th row: background stays light
+    rows = np.concatenate([rows, diag])
+    cols = np.concatenate([cols, diag])
+    data = np.ones(rows.size)
+    return csr_from_coo(COOMatrix(rows, cols, data, (n, n)))
+
+
+def _shuffle_rows(csr, seed: int = 0):
+    """The same nonzeros with the rows globally permuted."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(csr.shape[0])
+    rows = perm[np.repeat(np.arange(csr.shape[0]), csr.row_nnz())]
+    return csr_from_coo(COOMatrix(rows, csr.indices.copy(), csr.data.copy(), csr.shape))
+
+
+def _quality(csr):
+    return partition_quality(build_tiles(csr, CFG), csr)
+
+
+# --- imbalance / competitive ratio ------------------------------------------
+
+
+def test_skewed_matrix_blows_the_imbalance_and_competitive_gauges():
+    q = _quality(_skewed())
+    assert q["competitive_ratio"] > SKEWED_RATIO_MIN
+    assert q["rowgroup_imbalance"] > SKEWED_RATIO_MIN
+
+
+def test_uniform_random_stays_near_balanced():
+    q = _quality(uniform_random(1024, 0.01, seed=1))
+    assert q["competitive_ratio"] < UNIFORM_RATIO_MAX
+    # and the skew really is the discriminator, not a constant offset
+    assert q["competitive_ratio"] < _quality(_skewed())["competitive_ratio"]
+
+
+# --- cohesion ----------------------------------------------------------------
+
+
+def test_cohesion_banded_beats_shuffled_rows():
+    banded = banded_fem(2000, band=4, seed=0)
+    qb = _quality(banded)
+    qs = _quality(_shuffle_rows(banded))
+    assert qb["cohesion"] is not None and qs["cohesion"] is not None
+    # banded rows grouped together share column blocks; shuffled rows
+    # scatter their footprints across the whole band range
+    assert qb["cohesion"] > qs["cohesion"] + 0.2
+
+
+def test_cohesion_is_deterministic_and_none_without_csr():
+    csr = banded_fem(1000, band=3, seed=2)
+    tiles = build_tiles(csr, CFG)
+    q1 = partition_quality(tiles, csr)
+    q2 = partition_quality(tiles, csr)
+    assert q1["cohesion"] == q2["cohesion"]
+    assert q1["cohesion_random"] == q2["cohesion_random"]
+    q0 = partition_quality(tiles)  # no matrix -> no pattern information
+    assert q0["cohesion"] is None and q0["cohesion_score"] is None
+    assert q0["competitive_ratio"] >= 1.0  # still computed from the tiles
+
+
+# --- gauges + scrape ---------------------------------------------------------
+
+
+def test_plan_gauges_land_in_live_openmetrics_scrape():
+    reg = MatrixRegistry(search=False, strategy="stable")
+    reg.admit(_skewed(), "skewed", cfg=CFG)
+    text = render_openmetrics([reg.metrics])
+    fam = parse_openmetrics(text)
+    for family in (
+        "plan_competitive_ratio",
+        "plan_rowgroup_imbalance",
+        "plan_cohesion_score",
+        "plan_tile_occupancy",
+        "plan_autotune_searched",
+    ):
+        assert family in fam, f"{family} missing from the scrape"
+    (s,) = fam["plan_competitive_ratio"]["samples"]
+    assert s["labels"]["matrix"] == "skewed"
+    assert s["value"] > SKEWED_RATIO_MIN
+
+
+def test_register_plan_metrics_skips_missing_values():
+    from repro.obs.metrics import MetricRegistry
+
+    m = MetricRegistry(name="t-planview")
+    register_plan_metrics(m, "empty", {"tiles": 0.0, "cohesion": None})
+    assert m.value("plan.tiles", matrix="empty") == 0.0
+    assert m.get("plan.cohesion", matrix="empty") is None
+
+
+# --- provenance --------------------------------------------------------------
+
+
+def test_admission_records_autotune_provenance(tmp_path):
+    import json
+
+    candidates = [
+        PartitionConfig(row_block=64, col_block=128, group=8, lane=8),
+        PartitionConfig(row_block=128, col_block=128, group=8, lane=16),
+    ]
+    reg = MatrixRegistry(
+        cache_dir=tmp_path / "cache", candidates=candidates, strategy="stable"
+    )
+    csr = banded_fem(400, band=3, seed=1)
+    plan = reg.admit(csr, "tuned")
+    prov = plan.provenance
+    assert prov["searched"] and not prov["cache_hit"] and not prov["pinned"]
+    assert len(prov["trials"]) == len(candidates)
+    # fastest first, and the winner is the served config
+    objs = [t["objective_us"] for t in prov["trials"]]
+    assert objs == sorted(objs)
+    import dataclasses
+
+    assert prov["trials"][0]["config"] == dataclasses.asdict(plan.cfg)
+    # ... persisted into the on-disk cache entry too
+    (entry,) = list((tmp_path / "cache").glob("*.json"))
+    cached = json.loads(entry.read_text())
+    assert len(cached["trials"]) == len(candidates)
+    # a second registry over the same cache explains from the cached trials
+    reg2 = MatrixRegistry(
+        cache_dir=tmp_path / "cache", candidates=candidates, strategy="stable"
+    )
+    plan2 = reg2.admit(csr, "tuned")
+    assert plan2.provenance["cache_hit"]
+    assert plan2.provenance["trials"] == prov["trials"]
+    # provenance describes the plan but never leaks into kernel kwargs
+    assert "trials" not in plan._meta() and "provenance" not in plan._meta()
+
+
+def test_pinned_admission_has_empty_provenance():
+    reg = MatrixRegistry(search=False, strategy="stable")
+    plan = reg.admit(banded_fem(300, band=2, seed=3), "pinned", cfg=CFG)
+    prov = plan.provenance
+    assert prov["pinned"] and not prov["searched"] and prov["trials"] == []
+    stats = reg.stats()["pinned"]
+    assert stats["provenance"]["pinned"]
+    assert "occupancy_sample" not in stats["quality"]
+    assert stats["quality"]["competitive_ratio"] >= 1.0
+
+
+# --- explain -----------------------------------------------------------------
+
+
+def test_explain_round_trips_from_a_real_dump(tmp_path):
+    import json
+
+    reg = MatrixRegistry(search=False, strategy="stable")
+    reg.admit(_skewed(), "skewed", cfg=CFG)
+    path = tmp_path / "obs.json"
+    obs.dump(path)
+    snapshot = json.loads(path.read_text())
+    report = explain_report(snapshot, "skewed")
+    assert "== explain: skewed ==" in report
+    assert "competitive ratio" in report and "cohesion" in report
+    assert "IMBALANCED" in report  # the skew must reach the verdict line
+    pm = plan_metrics_from_snapshot(snapshot, "skewed")
+    assert pm["competitive_ratio"] > SKEWED_RATIO_MIN
+    # deterministic: same snapshot, same text
+    assert explain_report(snapshot, "skewed") == report
+
+
+def test_explain_is_na_safe_on_empty_and_partial_dumps():
+    empty = {"schema": 1, "registries": [], "spans": [], "requests": []}
+    report = explain_report(empty, "ghost")
+    assert "n/a" in report and "ghost" in report
+    assert explain_report(empty, "ghost") == report  # deterministic
+    partial = {
+        "registries": [
+            {
+                "registry": "r",
+                "metrics": [
+                    {
+                        "name": "plan.competitive_ratio",
+                        "labels": {"matrix": "p"},
+                        "type": "gauge",
+                        "value": 1.01,
+                    }
+                ],
+            }
+        ]
+    }
+    rep = explain_report(partial, "p")
+    assert "balanced" in rep  # verdict renders from the one gauge present
+    assert "n/a" in rep  # everything else degrades, nothing raises
+
+
+# --- flight-recorder default dump dir ---------------------------------------
+
+
+def test_flight_default_dump_dir_is_not_cwd(tmp_path, monkeypatch):
+    from repro.obs.flight import DEFAULT_DUMP_DIR, FlightRecorder
+
+    monkeypatch.delenv("REPRO_FLIGHT_DIR", raising=False)
+    monkeypatch.chdir(tmp_path)
+    fl = FlightRecorder(capacity=8)
+    fl.record("t")
+    path = fl.trigger("unit_test")
+    assert path is not None
+    # the artifact landed under the dedicated (gitignored) subdirectory,
+    # never loose in the working directory
+    assert (tmp_path / DEFAULT_DUMP_DIR).is_dir()
+    assert not list(tmp_path.glob("flight_*.json"))
+    assert DEFAULT_DUMP_DIR in path
+
+
+def test_flight_env_override_still_wins(tmp_path, monkeypatch):
+    from repro.obs.flight import FlightRecorder
+
+    target = tmp_path / "elsewhere"
+    monkeypatch.setenv("REPRO_FLIGHT_DIR", str(target))
+    fl = FlightRecorder(capacity=8)
+    assert fl.trigger("unit_test").startswith(str(target))
+
+
+@pytest.fixture(autouse=True)
+def _quiet_flight_budget():
+    """Keep admissions in this module from exhausting the global flight
+    recorder's dump budget for later tests."""
+    yield
+    from repro.obs.flight import get_flight
+
+    get_flight().reset()
