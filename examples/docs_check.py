@@ -1,0 +1,121 @@
+"""Docs executability gate: every fenced snippet in the docs must run.
+
+Checks ``README.md`` and every page under ``docs/`` by default.
+
+Documentation rots the moment an API drifts under it.  This check keeps
+the docs honest the same way tests keep the code honest:
+
+* every ```` ```python ```` block is executed, blocks within one file
+  sharing a namespace in document order (so a page can build state
+  incrementally, exactly as a reader pasting it into a REPL would);
+* every ```` ```bash ```` block is syntax-checked with ``bash -n`` (the
+  commands themselves may need artifacts or long runtimes CI should not
+  pay — the gate catches typos and quoting rot, not semantics);
+* all other fence languages (``yaml``, ``text``, bare fences for sample
+  output) are ignored.
+
+Python blocks run inside a throwaway working directory so snippet
+side-effect files (autotune caches, flight dumps, ``metrics.prom``)
+never land in the repo checkout.  Exits nonzero on the first failing
+snippet, naming the file and the line the fence opened on::
+
+    PYTHONPATH=src python examples/docs_check.py            # all of docs/
+    PYTHONPATH=src python examples/docs_check.py docs/serving.md
+"""
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_blocks(text: str):
+    """Yield ``(language, start_line, source)`` for each fenced block."""
+    lang, start, lines = None, 0, []
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _FENCE_RE.match(line.strip())
+        if m and lang is None:
+            lang, start, lines = m.group(1).lower(), i, []
+        elif line.strip() == "```" and lang is not None:
+            yield lang, start, "\n".join(lines) + "\n"
+            lang = None
+        elif lang is not None:
+            lines.append(line)
+
+
+def check_python(path: Path, blocks) -> int:
+    """Execute the file's python blocks in one shared namespace."""
+    failures = 0
+    namespace = {"__name__": f"docs_check:{path.name}"}
+    for lang, start, src in blocks:
+        if lang != "python":
+            continue
+        try:
+            code = compile(src, f"{path}:{start}", "exec")
+            exec(code, namespace)  # noqa: S102 - executing our own docs is the point
+        except Exception as e:  # noqa: BLE001 - report and keep the gate's exit code
+            print(f"FAIL {path}:{start} [python] {type(e).__name__}: {e}")
+            failures += 1
+        else:
+            print(f"ok   {path}:{start} [python]")
+    return failures
+
+
+def check_bash(path: Path, blocks) -> int:
+    """Syntax-check the file's bash blocks with ``bash -n``."""
+    failures = 0
+    for lang, start, src in blocks:
+        if lang not in ("bash", "sh", "shell"):
+            continue
+        proc = subprocess.run(
+            ["bash", "-n"], input=src, capture_output=True, text=True
+        )
+        if proc.returncode != 0:
+            print(f"FAIL {path}:{start} [bash] {proc.stderr.strip()}")
+            failures += 1
+        else:
+            print(f"ok   {path}:{start} [bash]")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "files",
+        nargs="*",
+        help="markdown files to check (default: README.md + docs/*.md)",
+    )
+    args = ap.parse_args(argv)
+    repo = Path(__file__).resolve().parent.parent
+    files = (
+        [Path(f).resolve() for f in args.files]
+        if args.files
+        else [repo / "README.md", *sorted((repo / "docs").glob("*.md"))]
+    )
+    if not files:
+        print("no docs to check", file=sys.stderr)
+        return 1
+    failures = 0
+    cwd = os.getcwd()
+    for path in files:
+        blocks = list(extract_blocks(path.read_text()))
+        with tempfile.TemporaryDirectory(prefix="docs_check_") as tmp:
+            os.chdir(tmp)  # snippet side-effect files stay out of the checkout
+            try:
+                failures += check_python(path, blocks)
+                failures += check_bash(path, blocks)
+            finally:
+                os.chdir(cwd)
+    if failures:
+        print(f"\n{failures} snippet(s) failed")
+        return 1
+    print(f"\nall snippets green across {len(files)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

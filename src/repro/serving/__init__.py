@@ -1,7 +1,12 @@
-# SpMV-traffic serving: admit a matrix once (content-hashed, autotuned,
-# device-resident), then coalesce concurrent y = A @ x requests into [n, k]
-# micro-batches served by one SpMM tile-stream pass each.  Distinct from
-# repro.serve (the LLM token engine).
+"""SpMV-traffic serving: admit a matrix once (content-hashed, autotuned,
+device-resident), then coalesce concurrent ``y = A @ x`` requests into
+``[n, k]`` micro-batches served by one SpMM tile-stream pass each.
+
+Multi-tenant policy lives in :mod:`repro.serving.qos` (deadline classes,
+typed backpressure, weighted-fair flush order) and
+:mod:`repro.serving.eviction` (HBM-budgeted LRU residency).  Distinct
+from ``repro.serve`` (the LLM token engine).
+"""
 from .autotune import (
     AutotuneCache,
     AutotuneResult,
@@ -13,6 +18,15 @@ from .autotune import (
 )
 from .batcher import MicroBatcher, SpMVRequest
 from .engine import ServingEngine, Ticket
+from .eviction import LRUEvictor, plan_device_bytes
+from .qos import (
+    BEST_EFFORT,
+    GOLD,
+    STANDARD,
+    BackpressureError,
+    QoSClass,
+    WeightedFairScheduler,
+)
 from .registry import MatrixPlan, MatrixRegistry
 
 __all__ = [
@@ -29,4 +43,12 @@ __all__ = [
     "Ticket",
     "MatrixPlan",
     "MatrixRegistry",
+    "QoSClass",
+    "BackpressureError",
+    "WeightedFairScheduler",
+    "GOLD",
+    "STANDARD",
+    "BEST_EFFORT",
+    "LRUEvictor",
+    "plan_device_bytes",
 ]

@@ -43,26 +43,54 @@ class SpMVRequest:
 
     @property
     def done(self) -> bool:
+        """Whether the request has completed (its result is assigned)."""
         return self.result is not None
 
 
 class MicroBatcher:
-    """Per-matrix FIFO queues with size- and deadline-triggered flushes."""
+    """Per-matrix FIFO queues with size- and deadline-triggered flushes.
+
+    ``max_wait_s`` is the default batching window; :meth:`set_wait`
+    overrides it per key so a tight-deadline QoS class flushes its
+    batches earlier than the engine-wide default.
+    """
 
     def __init__(self, *, max_batch: int = 16, max_wait_s: float = 0.002):
+        """Create empty queues with the given size/deadline flush policy."""
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self._queues: Dict[str, Deque[SpMVRequest]] = {}
+        self._waits: Dict[str, float] = {}
 
     def add(self, req: SpMVRequest) -> None:
+        """Enqueue one request on its matrix's FIFO."""
         self._queues.setdefault(req.key, deque()).append(req)
 
     def pending(self, key: Optional[str] = None) -> int:
+        """Pending request count for ``key`` (or across all queues)."""
         if key is not None:
             return len(self._queues.get(key, ()))
         return sum(len(q) for q in self._queues.values())
+
+    def set_wait(self, key: str, max_wait_s: Optional[float]) -> None:
+        """Override ``key``'s batching window; ``None`` restores default."""
+        if max_wait_s is None:
+            self._waits.pop(key, None)
+        else:
+            self._waits[key] = max_wait_s
+
+    def wait_for(self, key: str) -> float:
+        """The batching window in effect for ``key``."""
+        return self._waits.get(key, self.max_wait_s)
+
+    def head_age(self, key: str, now: float) -> float:
+        """Wait of ``key``'s oldest pending request, 0 on an empty queue."""
+        q = self._queues.get(key)
+        if not q:
+            return 0.0
+        return now - q[0].t_submit
 
     def due(self, now: float) -> List[str]:
         """Keys whose head batch must flush now: full, or deadline hit."""
@@ -70,7 +98,7 @@ class MicroBatcher:
         for key, q in self._queues.items():
             if not q:
                 continue
-            if len(q) >= self.max_batch or now - q[0].t_submit >= self.max_wait_s:
+            if len(q) >= self.max_batch or now - q[0].t_submit >= self.wait_for(key):
                 out.append(key)
         return out
 
@@ -82,6 +110,7 @@ class MicroBatcher:
         return [q.popleft() for _ in range(min(len(q), self.max_batch))]
 
     def keys_with_pending(self) -> List[str]:
+        """Keys that currently hold at least one queued request."""
         return [k for k, q in self._queues.items() if q]
 
     @staticmethod

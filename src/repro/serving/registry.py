@@ -35,6 +35,7 @@ from repro.obs.metrics import MetricRegistry
 from repro.obs import planview
 
 from .autotune import AutotuneCache, autotune_partition, matrix_hash
+from .eviction import LRUEvictor, plan_device_bytes
 
 __all__ = ["MatrixPlan", "MatrixRegistry"]
 
@@ -207,6 +208,16 @@ class MatrixRegistry:
     ledger, two ``stats()`` views.  Each registry defaults to its own
     instance (test isolation); all live instances aggregate into
     ``repro.obs.dump()``/``report()``.
+
+    ``hbm_budget_bytes`` caps the **device** footprint of staged tiles:
+    when admissions (or re-stages) push past the budget, the least-
+    recently-used plans are *unstaged* — device arrays dropped, host
+    tiles and autotuned geometry kept — and the next :meth:`get` against
+    an unstaged plan transparently re-stages it in one ``device_tiles``
+    call (zero re-preprocessing; a full re-admission would hit the
+    ``.hbp_autotune/`` disk cache by content hash anyway).  Transpose
+    pairs are evicted and re-staged as a unit.  ``None`` (default)
+    disables the budget — every admitted plan stays device-resident.
     """
 
     def __init__(
@@ -221,6 +232,7 @@ class MatrixRegistry:
         k_tiling: str = "grid",
         probe=None,
         metrics: Optional[MetricRegistry] = None,
+        hbm_budget_bytes: Optional[int] = None,
     ):
         if strategy is None:
             import jax
@@ -239,6 +251,9 @@ class MatrixRegistry:
         self.k_tiling = k_tiling
         self.probe = probe  # None: steady-state SpMM time (spmm_probe)
         self.metrics = metrics if metrics is not None else MetricRegistry(name="serving")
+        self.evictor = (
+            LRUEvictor(hbm_budget_bytes) if hbm_budget_bytes is not None else None
+        )
         self._plans: Dict[str, MatrixPlan] = {}
         self._by_hash: Dict[str, str] = {}
 
@@ -267,6 +282,7 @@ class MatrixRegistry:
                 )
             self.metrics.counter("registry.hits", matrix=plan.name).inc()
             self.metrics.counter("registry.admissions", matrix=plan.name).inc()
+            self._ensure_staged(plan)
             return plan
         if name is not None and name in self._plans:
             raise ValueError(
@@ -378,6 +394,7 @@ class MatrixRegistry:
             k_tiling=served_tiling,
             trace_id=admit_id,
         )
+        self._charge(plan)
         return plan
 
     def admit_pair(
@@ -420,6 +437,10 @@ class MatrixRegistry:
         plan._transpose = plan_T
         plan_T.transpose_name = plan.name
         plan_T._transpose = plan
+        if self.evictor is not None and plan_T is not plan:
+            # forward + backward are one residency unit: evicting one side
+            # would silently re-stage the other on the next training step
+            self.evictor.link(plan.name, plan_T.name)
         return plan
 
     def transpose_of(self, plan: MatrixPlan) -> MatrixPlan:
@@ -429,7 +450,16 @@ class MatrixRegistry:
         return plan._transpose
 
     def get(self, name: str) -> MatrixPlan:
-        return self._plans[name]
+        """The resident plan for ``name`` (raises ``KeyError`` if absent).
+
+        Under an HBM budget this is also the re-admission path: an
+        unstaged plan is transparently re-staged to the device here (and
+        its recency refreshed), so callers never observe eviction beyond
+        the one-time ``device_tiles`` cost.
+        """
+        plan = self._plans[name]
+        self._ensure_staged(plan)
+        return plan
 
     def __contains__(self, name: str) -> bool:
         return name in self._plans
@@ -438,17 +468,77 @@ class MatrixRegistry:
         return len(self._plans)
 
     def names(self):
+        """Names of every resident plan (staged or budget-unstaged)."""
         return list(self._plans)
 
     def evict(self, name: str) -> None:
+        """Fully remove ``name``: plan, content-hash binding, pair link.
+
+        Unlike budget-driven *unstaging* (device arrays only), this drops
+        the host plan too — the next admit of the same content rebuilds
+        tiles (the autotune disk cache still avoids the measured search).
+        """
         plan = self._plans.pop(name)
         del self._by_hash[plan.matrix_hash]
         partner = plan._transpose
         if partner is not None and partner is not plan:
             partner.transpose_name = None
             partner._transpose = None
+        if self.evictor is not None:
+            self.evictor.drop(name)
+            self.evictor.unlink(name)
         self.metrics.counter("registry.evictions", matrix=name).inc()
         self.metrics.gauge("registry.resident").set(len(self._plans))
+
+    # --- HBM-budget residency ---------------------------------------------
+
+    def _charge(self, plan: MatrixPlan) -> None:
+        """Charge ``plan``'s device bytes to the budget; unstage victims."""
+        if self.evictor is None:
+            return
+        victims = self.evictor.admit(plan.name, plan_device_bytes(plan.tiles))
+        for victim in victims:
+            self._unstage(victim)
+        self.metrics.gauge("evict.resident_bytes").set(self.evictor.resident_bytes)
+
+    def _unstage(self, name: str) -> None:
+        """Drop ``name``'s device arrays (host tiles and geometry stay)."""
+        plan = self._plans.get(name)
+        if plan is None or plan.device is None:
+            return
+        plan.device = None
+        plan._mean_div = None  # staged alongside the tiles; rebuilt on demand
+        self.metrics.counter("evict.unstaged", matrix=name).inc()
+        get_flight().record("evict.unstage", matrix=name)
+        if obs.enabled():
+            obs.counter("evict.unstaged", matrix=name).inc()
+
+    def _ensure_staged(self, plan: MatrixPlan) -> None:
+        """Refresh recency; re-stage the plan's unit if budget-evicted."""
+        if self.evictor is None:
+            return
+        self.evictor.touch(plan.name)
+        # the pair is one unit: restage both sides together so a training
+        # step never finds half of its forward/backward residency missing
+        unit = [plan]
+        if plan._transpose is not None and plan._transpose is not plan:
+            unit.append(plan._transpose)
+        for p in unit:
+            if p.device is not None:
+                continue
+            from repro.kernels import ops
+
+            t0 = time.perf_counter()
+            with obs.span("serve.restage", matrix=p.name):
+                p.device = ops.device_tiles(p.tiles)
+            restage_s = time.perf_counter() - t0
+            m = self.metrics
+            m.counter("evict.restages", matrix=p.name).inc()
+            m.counter("evict.restage_s", matrix=p.name).inc(restage_s)
+            get_flight().record(
+                "evict.restage", matrix=p.name, restage_s=round(restage_s, 6)
+            )
+            self._charge(p)
 
     def stats(self) -> dict:
         """Per-matrix admission/preprocessing snapshot (engine adds traffic).
